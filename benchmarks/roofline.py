@@ -1,0 +1,189 @@
+"""Roofline analysis per (arch x shape) from the dry-run artifacts.
+
+Three terms per cell (v5e numbers: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI):
+
+  compute term    = FLOPs_per_device / 197e12
+  memory term     = HBM_bytes_per_device / 819e9
+  collective term = wire_bytes_per_device / 50e9
+
+FLOPs and HBM bytes are ANALYTIC (model formulas below): XLA's
+HloCostAnalysis visits while-loop bodies once, so compiled.cost_analysis()
+undercounts scanned layers by ~n_layers x — we report it alongside as
+hlo_flops with the MODEL/HLO ratio, per EXPERIMENTS.md.  Collective bytes are
+parsed from the post-SPMD HLO with loop bodies multiplied by their trip
+counts (repro.launch.dryrun.parse_collectives), bf16-adjusted for XLA:CPU's
+f32 promotion.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_config, get_run_config
+from repro.models import build
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results")
+
+
+def param_count(cfg):
+    m = build(cfg)
+    spec = m.param_specs()
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(spec))
+    active = total
+    if cfg.moe:
+        expert = 0
+        for path, l in jax.tree_util.tree_flatten_with_path(spec)[0]:
+            names = [getattr(k, "key", "") for k in path]
+            if names[-1] in ("wi", "wg", "wo") and l.ndim == 4:
+                expert += int(np.prod(l.shape))
+        active = total - expert + expert * cfg.moe.top_k / cfg.moe.n_experts
+    return total, active
+
+
+def attn_flops(cfg, B, S, causal=True):
+    """Forward attention score+value FLOPs for all layers."""
+    if cfg.n_heads == 0:
+        return 0.0
+    kinds = list(cfg.block_pattern) * cfg.n_blocks + list(cfg.tail)
+    tot = 0.0
+    for k in kinds:
+        if k in ("G", "E"):
+            eff = S / 2 if causal else S
+        elif k == "L":
+            eff = min(cfg.window, S)
+        else:
+            continue
+        tot += 4.0 * B * S * eff * cfg.n_heads * cfg.d_head
+    if cfg.enc_dec:
+        tot += cfg.n_enc_layers * 4.0 * B * S * S * cfg.n_heads * cfg.d_head
+        tot += len(kinds) * 4.0 * B * S * S * cfg.n_kv_heads * cfg.d_head
+    return tot
+
+
+def model_flops(arch: str, shape_name: str, n_devices: int) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    total, active = param_count(cfg)
+    if shape.kind == "train":
+        D = B * S
+        flops = 6.0 * active * D + 3.0 * attn_flops(cfg, B, S)
+    elif shape.kind == "prefill":
+        D = B * S
+        flops = 2.0 * active * D + attn_flops(cfg, B, S)
+    else:  # decode: one token, KV cache of S
+        flops = 2.0 * active * B
+        if cfg.n_heads:
+            kinds = list(cfg.block_pattern) * cfg.n_blocks + list(cfg.tail)
+            for k in kinds:
+                eff = min(cfg.window, S) if k == "L" else S
+                if k in ("G", "L"):
+                    flops += 4.0 * B * eff * cfg.n_heads * cfg.d_head
+    return dict(total_params=total, active_params=active,
+                model_flops=flops, per_device_flops=flops / n_devices)
+
+
+def hbm_bytes(arch: str, shape_name: str, n_devices: int,
+              persistent: int, temp_tpu: int) -> float:
+    """Per-device HBM traffic per step.
+
+    train: params touched ~4x (fwd read, bwd read, grad write, opt rw of
+    master+m+v) + saved residuals written+read + transient working set ~2x.
+    prefill: params 1x + activations. decode: params 1x + cache read/write
+    (the classic decode memory wall).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    kind = shape.kind
+    if kind == "train":
+        return 4.0 * persistent + 2.0 * temp_tpu
+    if kind == "prefill":
+        return 1.0 * persistent + 2.0 * temp_tpu
+    return 1.0 * persistent + temp_tpu  # decode
+
+
+def load_cell(mesh: str, arch: str, shape: str):
+    p = os.path.join(RESULTS, mesh, f"{arch}__{shape}.json")
+    if not os.path.exists(p):
+        return None
+    return json.load(open(p))
+
+
+def roofline_row(arch: str, shape: str, mesh: str = "single"):
+    cell = load_cell(mesh, arch, shape)
+    if cell is None or cell.get("skipped") or cell.get("failed"):
+        return None
+    n = cell["n_devices"]
+    mf = model_flops(arch, shape, n)
+    mem = cell["memory"]
+    persistent = mem["persistent_bytes"]
+    temp = mem["temp_bytes"] // 2  # bf16-adjusted (see dryrun docstring)
+    hbm = hbm_bytes(arch, shape, n, persistent, temp)
+    wire = cell["collectives"]["total_wire_bytes"]
+    t_c = mf["per_device_flops"] / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = wire / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    hlo_flops = cell["cost"].get("flops", 0.0)
+    return dict(
+        arch=arch, shape=shape, mesh=mesh, n_devices=n,
+        model_flops=mf["model_flops"],
+        per_device_flops=mf["per_device_flops"],
+        hlo_flops=hlo_flops,
+        model_over_hlo=round(mf["per_device_flops"] / hlo_flops, 2)
+        if hlo_flops else None,
+        compute_s=t_c, memory_s=t_m, collective_s=t_x,
+        dominant=dom,
+        # no-overlap lower bound on MFU: compute / (all three serialized);
+        # perfect overlap would give t_c / max(...) — we report the
+        # pessimistic bound and hillclimb the non-compute terms
+        roofline_frac=round(t_c / (t_c + t_m + t_x), 4)
+        if (t_c + t_m + t_x) else 0.0,
+        # for bandwidth-bound cells (decode): how close to the dominant
+        # resource's roofline the step runs if nothing overlaps
+        efficiency=round(max(t_c, t_m, t_x) / (t_c + t_m + t_x), 4)
+        if (t_c + t_m + t_x) else 0.0,
+        mem_gib=round(mem["per_device_total_tpu_est"] / 2 ** 30, 2),
+        fits=mem["fits_16g"],
+    )
+
+
+def full_table(mesh: str = "single"):
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if not cfg.supports(shape):
+                rows.append(dict(arch=arch, shape=shape.name, mesh=mesh,
+                                 skipped=True))
+                continue
+            r = roofline_row(arch, shape.name, mesh)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def summarize(rows):
+    done = [r for r in rows if not r.get("skipped")]
+    compute_cells = [r for r in done if r["shape"] in ("train_4k",
+                                                       "prefill_32k")]
+    worst = min(compute_cells, key=lambda r: r["roofline_frac"])
+    coll = max(done, key=lambda r: r["collective_s"]
+               / max(r["compute_s"] + r["memory_s"], 1e-12))
+    return dict(cells=len(done),
+                all_fit=all(r["fits"] for r in done),
+                mean_mfu_bound_train_prefill=round(float(np.mean(
+                    [r["roofline_frac"] for r in compute_cells])), 4),
+                mean_efficiency_all=round(float(np.mean(
+                    [r["efficiency"] for r in done])), 4),
+                worst_compute_cell=f"{worst['arch']}/{worst['shape']}"
+                                   f" ({worst['roofline_frac']})",
+                most_collective_bound=f"{coll['arch']}/{coll['shape']}")

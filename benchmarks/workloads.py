@@ -1,0 +1,57 @@
+"""The paper's benchmark DLA workloads: VGG16 and ResNet50 at 224x224 as
+im2col GEMM sequences (exact layer dimensions), for the analytic perf/IO
+models (Figs. 8, 13)."""
+from __future__ import annotations
+
+from repro.core.perfmodel import Gemm
+
+# (name, out_hw, k, cin, cout) — VGG16 convs + fc
+_VGG16 = [
+    ("conv1_1", 224, 3, 3, 64), ("conv1_2", 224, 3, 64, 64),
+    ("conv2_1", 112, 3, 64, 128), ("conv2_2", 112, 3, 128, 128),
+    ("conv3_1", 56, 3, 128, 256), ("conv3_2", 56, 3, 256, 256),
+    ("conv3_3", 56, 3, 256, 256),
+    ("conv4_1", 28, 3, 256, 512), ("conv4_2", 28, 3, 512, 512),
+    ("conv4_3", 28, 3, 512, 512),
+    ("conv5_1", 14, 3, 512, 512), ("conv5_2", 14, 3, 512, 512),
+    ("conv5_3", 14, 3, 512, 512),
+]
+
+# ResNet50: (name, out_hw, k, cin, cout, repeats)
+_RESNET50 = [
+    ("conv1", 112, 7, 3, 64, 1),
+    ("c2_a", 56, 1, 64, 64, 3), ("c2_b", 56, 3, 64, 64, 3),
+    ("c2_c", 56, 1, 64, 256, 3),
+    ("c3_a", 28, 1, 256, 128, 4), ("c3_b", 28, 3, 128, 128, 4),
+    ("c3_c", 28, 1, 128, 512, 4),
+    ("c4_a", 14, 1, 512, 256, 6), ("c4_b", 14, 3, 256, 256, 6),
+    ("c4_c", 14, 1, 256, 1024, 6),
+    ("c5_a", 7, 1, 1024, 512, 3), ("c5_b", 7, 3, 512, 512, 3),
+    ("c5_c", 7, 1, 512, 2048, 3),
+]
+
+
+def _sens_rank(gemms):
+    """Early layers are the fault-sensitive set (cf. Fig. 5): mark the first
+    ~40% as sensitive."""
+    n = int(0.4 * len(gemms))
+    return [Gemm(g.name, g.M, g.K, g.N, sensitive=(i < n))
+            for i, g in enumerate(gemms)]
+
+
+def vgg16_gemms() -> list[Gemm]:
+    out = [Gemm(n, hw * hw, k * k * cin, cout)
+           for n, hw, k, cin, cout in _VGG16]
+    out.append(Gemm("fc6", 1, 7 * 7 * 512, 4096))
+    out.append(Gemm("fc7", 1, 4096, 4096))
+    out.append(Gemm("fc8", 1, 4096, 1000))
+    return _sens_rank(out)
+
+
+def resnet50_gemms() -> list[Gemm]:
+    out = []
+    for n, hw, k, cin, cout, rep in _RESNET50:
+        for r in range(rep):
+            out.append(Gemm(f"{n}.{r}", hw * hw, k * k * cin, cout))
+    out.append(Gemm("fc", 1, 2048, 1000))
+    return _sens_rank(out)

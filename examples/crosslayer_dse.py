@@ -1,0 +1,48 @@
+"""Run the paper's full cross-layer design-space exploration (Fig. 1 / Alg. 3)
+on the reduced VGG benchmark and print the Table-II-style optimum.
+
+  PYTHONPATH=src python examples/crosslayer_dse.py [--ber 1e-3] [--iters 16]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import bayesopt as B
+from repro.core.evaluate import trained_cnn
+from repro.core.pipeline import optimize
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ber", type=float, default=1e-3)
+    ap.add_argument("--iters", type=int, default=16)
+    args = ap.parse_args()
+
+    print("training the reduced VGG benchmark ...")
+    oracle = trained_cnn("vgg", steps=250)
+    clean = oracle.accuracy(None)
+    print(f"clean accuracy: {clean:.3f}")
+
+    from benchmarks.workloads import vgg16_gemms
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    cons = B.Constraints(acc_min=0.97 * clean, perf_max=0.10, bw_max=0.10)
+    print(f"constraints: acc >= {cons.acc_min:.3f}, perf/bw loss <= 10%")
+
+    res = optimize(lambda ft: oracle.accuracy(ft), vgg16_gemms(), cons,
+                   args.ber, iter_max_step=args.iters, seed=0)
+    if res.ft is None:
+        print("no feasible design found — raise --iters")
+        return
+    print("\noptimized cross-layer design (cf. paper Table II):")
+    for k in ("s_th", "ib_th", "nb_th", "q_scale", "s_policy", "dot_size",
+              "data_reuse", "pe_policy"):
+        print(f"  {k:12s} = {getattr(res.ft, k)}")
+    print(f"  area overhead = {res.area_overhead*100:.1f}% "
+          f"(evaluations: {res.dse.evaluations}, pruned: {res.dse.pruned})")
+    print(f"  accuracy under fault: {oracle.accuracy(res.ft):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""The paper's contribution: cross-layer fault-tolerant DLA optimization.
+
+Layers:
+  algorithm    — importance (Alg.1), bit_importance (Alg.2), quantization
+  architecture — flexhyca (FlexHyCA dual-path linear), perfmodel
+  circuit      — faults (BER injection + TMR semantics), area (bit-TMR cost)
+  cross-layer  — bayesopt (Alg.3), strategies, pipeline (Fig.1 driver)
+"""
+from repro.core.flexhyca import FTConfig, ft_linear, clean_linear  # noqa: F401
+from repro.core.bayesopt import Constraints, bayes_design_opt, table1_space  # noqa: F401
+from repro.core.pipeline import optimize  # noqa: F401

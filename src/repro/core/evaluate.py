@@ -1,0 +1,115 @@
+"""Accuracy-under-fault oracles: connect models to the FT stack.
+
+These drive the paper's experiments: layer sensitivity (Fig. 5/6), strategy
+comparison (Fig. 7), S_TH x (IB,NB) surfaces (Fig. 10), Q_scale (Fig. 11),
+and the Bayesian DSE's accuracy oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flexhyca import FTConfig
+from repro.core.importance import ImportanceResult, neuron_importance
+from repro.data.pipeline import vision_batch
+from repro.models.cnn import CNNConfig, accuracy, apply_cnn, xent_loss
+from repro.models.common import FTCtx
+
+
+@dataclasses.dataclass
+class CnnOracle:
+    """Fault-injection evaluation for a trained CNN."""
+    params: dict
+    cfg: CNNConfig
+    n_eval: int = 384
+    n_rep: int = 3              # fault-draw repetitions averaged
+    data_seed: int = 99
+    noise: float = 0.4
+
+    def __post_init__(self):
+        self._imgs, self._labels = vision_batch(
+            jax.random.PRNGKey(7), self.n_eval, self.cfg.n_classes,
+            self.cfg.hw, noise=self.noise, seed=self.data_seed)
+        self._imp: ImportanceResult | None = None
+        self._sens_cache: dict = {}
+
+    # ---- Algorithm 1 ---------------------------------------------------
+    def importance(self) -> ImportanceResult:
+        if self._imp is None:
+            batches = [
+                vision_batch(jax.random.PRNGKey(i), 64, self.cfg.n_classes,
+                             self.cfg.hw, noise=self.noise,
+                             seed=self.data_seed)
+                for i in range(4)]
+            def apply_fn(params, batch, probe):
+                return apply_cnn(params, self.cfg, batch[0], probe=probe)
+            self._imp = neuron_importance(
+                apply_fn, self.params, batches,
+                lambda out, batch: xent_loss(out, batch[1]))
+        return self._imp
+
+    def masks(self, s_th: float, policy: str = "uniform"):
+        return self.importance().select(s_th, policy)
+
+    # ---- accuracy under fault ------------------------------------------
+    def accuracy(self, ft: FTConfig | None, masks=None,
+                 protected_layers=None, seed: int = 0) -> float:
+        if ft is None or ft.ber == 0:
+            logits = apply_cnn(self.params, self.cfg, self._imgs)
+            return float(accuracy(logits, self._labels))
+        accs = []
+        if masks is None and ft.strategy == "cl":
+            masks = self.masks(ft.s_th, ft.s_policy)
+        for r in range(self.n_rep):
+            ftc = FTCtx(ft, jax.random.PRNGKey(seed * 97 + r), masks,
+                        protected_layers)
+            logits = apply_cnn(self.params, self.cfg, self._imgs, ftc=ftc)
+            accs.append(float(accuracy(logits, self._labels)))
+        return sum(accs) / len(accs)
+
+    def layer_names(self) -> list[str]:
+        drop = {"head"}
+        return [k for k in self.params if k not in drop]
+
+    # ---- Fig. 5: per-layer sensitivity ---------------------------------
+    def layer_sensitivity(self, ber: float, seed: int = 0) -> dict[str, float]:
+        """Accuracy gain from fully protecting one layer vs none protected."""
+        key = (ber, seed)
+        if key in self._sens_cache:
+            return self._sens_cache[key]
+        base_ft = FTConfig(ber=ber, strategy="arch")
+        none = self.accuracy(base_ft, protected_layers=set(), seed=seed)
+        out = {}
+        for name in self.layer_names():
+            a = self.accuracy(base_ft, protected_layers={name}, seed=seed)
+            out[name] = a - none
+        self._sens_cache[key] = out
+        return out
+
+    # ---- Fig. 6: cumulative protection curve ----------------------------
+    def cumulative_protection(self, ber: float, seed: int = 0):
+        sens = self.layer_sensitivity(ber, seed)
+        order = sorted(sens, key=sens.get, reverse=True)
+        ft = FTConfig(ber=ber, strategy="arch")
+        curve = [("none", self.accuracy(ft, protected_layers=set(),
+                                        seed=seed))]
+        prot: set = set()
+        for name in order:
+            prot.add(name)
+            curve.append((name, self.accuracy(ft, protected_layers=set(prot),
+                                              seed=seed)))
+        return curve
+
+
+@lru_cache(maxsize=4)
+def trained_cnn(arch: str = "vgg", steps: int = 250) -> CnnOracle:
+    """Train (or fetch cached) the reduced paper benchmark CNN."""
+    from repro.models.cnn import train_cnn
+    cfg = CNNConfig(arch=arch)
+    params, acc = train_cnn(jax.random.PRNGKey(0), cfg, steps=steps)
+    o = CnnOracle(params, cfg)
+    o.clean_acc = acc
+    return o

@@ -1,0 +1,85 @@
+"""Soft-error (bit-flip) fault injection, following the paper's protocol:
+random bit flips at a given BER on quantized neuron outputs and weights.
+
+Protection semantics
+--------------------
+A TMR-protected bit only fails if >=2 of 3 replicas flip the same way, so a
+protected bit's *residual* flip probability is ``3*ber^2*(1-ber) + ber^3``.
+``flip_bits`` takes a per-bit protection mask and applies the residual rate to
+protected bits instead of pretending they are perfectly immune.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def residual_ber(ber: float) -> float:
+    """Residual flip probability of a TMR-voted bit."""
+    return 3.0 * ber * ber * (1.0 - ber) + ber ** 3
+
+
+def _flip_plane(key, shape, p):
+    return jax.random.bernoulli(key, p, shape)
+
+
+def flip_bits(key: jax.Array, x: jax.Array, ber: float, bits: int,
+              protected_mask: int | jax.Array = 0,
+              signed: bool = True) -> jax.Array:
+    """Flip each of the low `bits` bits of two's-complement `x` with prob `ber`.
+
+    Args:
+      x: int32 array holding `bits`-wide two's-complement values.
+      protected_mask: int bitmask (or int32 array broadcastable to x) of bits
+        under TMR protection — those flip at the residual rate instead.
+    Returns int32 array, re-signed to `bits` wide.
+    """
+    ber = float(ber)
+    x = x.astype(jnp.int32)
+    mask_all = (1 << bits) - 1
+    ux = x & mask_all
+    keys = jax.random.split(key, 2 * bits)
+    flips = jnp.zeros_like(ux)
+    prot = jnp.broadcast_to(jnp.asarray(protected_mask, jnp.int32), ux.shape)
+    r = residual_ber(ber)
+    for b in range(bits):
+        bitval = 1 << b
+        is_prot = (prot & bitval) != 0
+        f_raw = _flip_plane(keys[2 * b], ux.shape, ber)
+        f_res = _flip_plane(keys[2 * b + 1], ux.shape, r) if r > 0 else jnp.zeros(ux.shape, bool)
+        f = jnp.where(is_prot, f_res, f_raw)
+        flips = flips | jnp.where(f, bitval, 0)
+    ux = ux ^ flips
+    if signed:  # sign-extend back
+        sign = 1 << (bits - 1)
+        ux = jnp.where((ux & sign) != 0, ux - (1 << bits), ux)
+    return ux
+
+
+def top_bits_mask(n_top: int, bits: int) -> int:
+    """Bitmask selecting the high `n_top` bits of a `bits`-wide word."""
+    n_top = max(0, min(n_top, bits))
+    return ((1 << n_top) - 1) << (bits - n_top)
+
+
+def inject_output_faults(key, yq: jax.Array, ber: float, *,
+                         bits: int = 8,
+                         protect_top: int | jax.Array = 0) -> jax.Array:
+    """Inject faults into quantized neuron outputs.
+
+    `protect_top` is the number of protected high bits; may be a per-channel
+    int32 array (last-dim broadcast) so important neurons (IB_TH) and ordinary
+    neurons (NB_TH) get different protection — the paper's bit dimension.
+    """
+    if isinstance(protect_top, (int,)):
+        mask = top_bits_mask(protect_top, bits)
+    else:
+        p = jnp.clip(protect_top.astype(jnp.int32), 0, bits)
+        mask = ((1 << p) - 1) << (bits - p)
+        mask = jnp.where(p > 0, mask, 0)
+    return flip_bits(key, yq, ber, bits, protected_mask=mask)
+
+
+def inject_weight_faults(key, wq: jax.Array, ber: float, bits: int = 8) -> jax.Array:
+    """Faults in weight SRAM (unprotected; the paper protects compute logic)."""
+    return flip_bits(key, wq, ber, bits)

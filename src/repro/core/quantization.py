@@ -1,0 +1,113 @@
+"""Int8 symmetric quantization with Q_scale-constrained accumulator truncation.
+
+Models the DLA datapath of the paper bit-exactly:
+
+  int8 activations x int8 weights -> int16 products -> 24-bit accumulator
+  -> truncate an 8-bit window [t+7 : t] out of the accumulator -> int8 output
+
+The truncation LSB ``t`` is the per-layer "quantization selection".  The paper's
+quantization *constraint* requires ``t >= Q_scale``, which shrinks the set of
+multiplier/accumulator bit-columns that can ever feed an important output bit
+(see ``repro.core.area``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127
+ACC_BITS = 24          # paper: "the accumulator data width is 24 bits"
+MUL_OUT_BITS = 16      # 8b x 8b -> 16b product
+OUT_BITS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8
+    acc_bits: int = ACC_BITS
+    q_scale: int = 0          # minimum allowed truncation LSB (paper's Q_scale)
+    per_channel: bool = True  # per-output-channel weight scales
+
+
+def quantize(x: jax.Array, bits: int = 8, axis=None):
+    """Symmetric linear quantization.  Returns (q:int8-valued int32, scale)."""
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def saturate(acc: jax.Array, bits: int = ACC_BITS) -> jax.Array:
+    """Saturating arithmetic at `bits`-wide two's complement (DLA accumulator)."""
+    lo = -(1 << (bits - 1))
+    hi = (1 << (bits - 1)) - 1
+    return jnp.clip(acc, lo, hi)
+
+
+def choose_trunc_lsb(acc_absmax: jax.Array, out_bits: int = OUT_BITS,
+                     q_scale: int = 0, acc_bits: int = ACC_BITS) -> jax.Array:
+    """Pick the truncation LSB t so the 8-bit window [t+out_bits-1 : t] covers
+    the accumulator's dynamic range, subject to the constraint t >= q_scale.
+
+    t = max(q_scale, ceil(log2(absmax + 1)) - (out_bits - 1))   (sign bit kept)
+    """
+    # number of magnitude bits needed
+    need = jnp.ceil(jnp.log2(jnp.maximum(acc_absmax.astype(jnp.float32), 1.0) + 1.0))
+    t = jnp.maximum(need - (out_bits - 1), 0).astype(jnp.int32)
+    t = jnp.clip(t, q_scale, acc_bits - out_bits)
+    return t
+
+
+def truncate_acc(acc: jax.Array, t, out_bits: int = OUT_BITS) -> jax.Array:
+    """Take the signed window [t+out_bits-1 : t] of the accumulator with
+    round-to-nearest and saturation — the DLA requantization step."""
+    t = jnp.asarray(t, jnp.int32)
+    half = jnp.where(t > 0, 1 << jnp.maximum(t - 1, 0), 0)
+    rounded = (acc + half) >> t
+    qmax = 2 ** (out_bits - 1) - 1
+    return jnp.clip(rounded, -qmax - 1, qmax)
+
+
+@partial(jax.jit, static_argnames=("q_scale",))
+def qmatmul(xq: jax.Array, wq: jax.Array, q_scale: int = 0):
+    """Bit-exact DLA matmul: int8 x int8 -> saturating 24-bit acc -> int8 window.
+
+    Args:
+      xq: (M, K) int32 holding int8 values.
+      wq: (K, N) int32 holding int8 values.
+    Returns:
+      (yq, t): int8-valued int32 outputs (M, N) and the per-matmul truncation
+      LSB t (scalar int32, >= q_scale).
+    """
+    acc = saturate(jnp.matmul(xq, wq, preferred_element_type=jnp.int32))
+    t = choose_trunc_lsb(jnp.max(jnp.abs(acc)), q_scale=q_scale)
+    return truncate_acc(acc, t), t
+
+
+def fake_quant_linear(x: jax.Array, w: jax.Array, q_scale: int = 0):
+    """Float-in/float-out linear computed through the quantized DLA datapath.
+
+    Returns (y, aux) where aux carries the integer intermediates needed by the
+    fault-injection / protection pipeline.
+    """
+    xq, sx = quantize(x, axis=None)
+    wq, sw = quantize(w, axis=None)
+    yq, t = qmatmul(xq, wq, q_scale)
+    scale = sx * sw * (2.0 ** t.astype(jnp.float32))
+    return yq.astype(jnp.float32) * scale, dict(xq=xq, wq=wq, t=t, sx=sx, sw=sw)
+
+
+def quant_error(x: jax.Array, q_scale: int) -> jax.Array:
+    """Relative RMS error introduced by quantizing through the constrained
+    datapath — used to reproduce paper Fig. 11 (Q_scale vs accuracy)."""
+    w = jnp.eye(x.shape[-1], dtype=jnp.float32)
+    y, _ = fake_quant_linear(x, w, q_scale=q_scale)
+    return jnp.sqrt(jnp.mean((y - x) ** 2)) / (jnp.sqrt(jnp.mean(x ** 2)) + 1e-9)

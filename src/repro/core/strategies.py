@@ -1,0 +1,77 @@
+"""The paper's comparison set of fault-tolerant DLA designs.
+
+Base, TMR-CRT{1,2,3}, TMR-ARCH, TMR-ALG, TMR-CL — each exposing the three
+evaluation axes of Section IV: accuracy-under-fault (via ``ft_linear``
+configs), execution time (via ``perfmodel``) and redundant chip area (via
+``area``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core import area as A
+from repro.core import perfmodel as P
+from repro.core.flexhyca import FTConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str
+    ft: FTConfig
+
+    def with_ber(self, ber: float) -> FTConfig:
+        return dataclasses.replace(self.ft, ber=ber)
+
+    # ---- area -----------------------------------------------------------
+    def area_relative(self, array_dim: int = 32) -> float:
+        """Computing-array area relative to the unprotected base array."""
+        ft = self.ft
+        if self.name == "base":
+            return 1.0
+        if self.name.startswith("crt"):
+            k = int(self.name[3:])
+            # circuit-only: every PE protects its top-k bits, quantization
+            # unconstrained (q_scale=0), direct redundancy.
+            return (A.protected_pe_cost(k, q_scale=0, policy="direct")
+                    / A.pe_cost())
+        if self.name == "arch":
+            # spatial TMR: voting logic + control on the existing array
+            return 1.0 + (A.GE_VOTER * A.OUT_BITS * 3) / (A.pe_cost() * 9)
+        if self.name == "alg":
+            return 1.0  # temporal redundancy: no extra hardware
+        if self.name == "cl":
+            r = A.array_area(array_dim, ft.nb_th, ft.q_scale, ft.pe_policy,
+                             dot_size=ft.dot_size, ib_th=ft.ib_th)
+            return r["relative"]
+        raise ValueError(self.name)
+
+    # ---- performance ------------------------------------------------------
+    def perf_loss(self, layers: Sequence[P.Gemm], array_dim: int = 32) -> float:
+        cfg = P.DlaConfig(array_dim=array_dim, dot_size=self.ft.dot_size,
+                          data_reuse=self.ft.data_reuse)
+        kind = {"base": "base", "crt1": "crt", "crt2": "crt", "crt3": "crt",
+                "arch": "arch", "alg": "alg", "cl": "cl"}[self.name]
+        return P.perf_loss(layers, cfg, kind, s_th=self.ft.s_th)
+
+    def extra_io(self, layers: Sequence[P.Gemm], array_dim: int = 32) -> float:
+        cfg = P.DlaConfig(array_dim=array_dim, dot_size=self.ft.dot_size,
+                          data_reuse=self.ft.data_reuse)
+        kind = {"base": "base", "crt1": "crt", "crt2": "crt", "crt3": "crt",
+                "arch": "arch", "alg": "alg", "cl": "cl"}[self.name]
+        return P.io_bytes(layers, cfg, kind, s_th=self.ft.s_th)["extra_over_weights"]
+
+
+def make_strategies(cl: FTConfig | None = None) -> dict[str, Strategy]:
+    """The paper's comparison set.  `cl` is the DSE-optimized TMR-CL config."""
+    base = FTConfig(strategy="base")
+    out = {
+        "base": Strategy("base", base),
+        "crt1": Strategy("crt1", dataclasses.replace(base, strategy="crt1")),
+        "crt2": Strategy("crt2", dataclasses.replace(base, strategy="crt2")),
+        "crt3": Strategy("crt3", dataclasses.replace(base, strategy="crt3")),
+        "arch": Strategy("arch", dataclasses.replace(base, strategy="arch")),
+        "alg": Strategy("alg", dataclasses.replace(base, strategy="alg")),
+        "cl": Strategy("cl", cl or FTConfig(strategy="cl")),
+    }
+    return out

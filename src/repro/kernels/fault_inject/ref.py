@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the bit-flip fault-injection kernel.
+
+Deterministic given the random planes, so kernel vs oracle tests are exact.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def inject_ref(x, rnd, protect, ber: float, bits: int = 8):
+    """x: (M,N) int32 values `bits` wide; rnd: (bits,M,N) uint32 planes;
+    protect: (N,) int32 protected high-bit count per output channel."""
+    thresh = jnp.uint32(min(int(ber * (1 << 32)), (1 << 32) - 1))
+    mask_all = (1 << bits) - 1
+    ux = x.astype(jnp.int32) & mask_all
+    flips = jnp.zeros_like(ux)
+    for b in range(bits):
+        flip = rnd[b] < thresh
+        unprotected = b < (bits - protect)[None, :]
+        flips = flips | jnp.where(flip & unprotected, 1 << b, 0)
+    ux = ux ^ flips
+    sign = 1 << (bits - 1)
+    return jnp.where((ux & sign) != 0, ux - (1 << bits), ux)

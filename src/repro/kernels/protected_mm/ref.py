@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused FlexHyCA protected matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.fault_inject.ref import inject_ref
+from repro.kernels.qmatmul.ref import qmatmul_ref
+
+
+def protected_mm_ref(xq, wq, rnd_ord, rnd_imp, imp_mask, *, t: int,
+                     ber: float, ib: int, nb: int, bits: int = 8):
+    """FlexHyCA PE-array semantics:
+
+      - every output computed on the 2-D array: faults at `ber` with the top
+        `nb` bits TMR-protected,
+      - important output channels recomputed on the DPPU: independent fault
+        draw with the top `ib` bits protected; DPPU result overrides.
+    """
+    yq = qmatmul_ref(xq, wq, t).astype(jnp.int32)
+    n = wq.shape[1]
+    prot_ord = jnp.full((n,), nb, jnp.int32)
+    prot_imp = jnp.full((n,), ib, jnp.int32)
+    y_ord = inject_ref(yq, rnd_ord, prot_ord, ber, bits)
+    y_imp = inject_ref(yq, rnd_imp, prot_imp, ber, bits)
+    return jnp.where(imp_mask[None, :] != 0, y_imp, y_ord).astype(jnp.int8)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the quantized DLA matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+ACC_BITS = 24
+OUT_BITS = 8
+
+
+def saturate(acc, bits=ACC_BITS):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return jnp.clip(acc, lo, hi)
+
+
+def truncate(acc, t: int, out_bits=OUT_BITS):
+    half = (1 << (t - 1)) if t > 0 else 0
+    r = (acc + half) >> t
+    qmax = (1 << (out_bits - 1)) - 1
+    return jnp.clip(r, -qmax - 1, qmax)
+
+
+def qmatmul_ref(xq, wq, t: int, acc_bits: int = ACC_BITS):
+    """int8-valued inputs -> int8-valued output through a saturating
+    `acc_bits` accumulator and an 8-bit window at LSB `t`."""
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    return truncate(saturate(acc, acc_bits), t).astype(jnp.int8)

@@ -1,0 +1,142 @@
+"""The paper's benchmark CNNs (VGG16-style, ResNet50-style), reduced.
+
+Every convolution runs as an im2col GEMM through ``repro.models.common.
+linear`` — exactly how the DLA computes convs on its MAC array — so the
+paper's fault-injection / selective-protection stack (``ftc``) and the
+importance probe (``probe``) apply to CNNs and LMs through one code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, linear, tag
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    arch: str = "vgg"          # vgg | resnet
+    channels: tuple = (16, 32)
+    n_classes: int = 8
+    hw: int = 16
+    in_channels: int = 1
+
+
+def _im2col(x, k: int = 3):
+    """x: (B, H, W, C) -> (B, H, W, k*k*C) patches (SAME padding)."""
+    B, H, W, C = x.shape
+    p = jax.lax.conv_general_dilated_patches(
+        jnp.moveaxis(x, -1, 1), (k, k), (1, 1), "SAME")
+    # p: (B, C*k*k, H, W) -> (B, H, W, C*k*k)
+    return jnp.moveaxis(p, 1, -1)
+
+
+def conv(params, x, name, probe=None, ftc=None):
+    """3x3 conv as an im2col GEMM (the DLA mapping)."""
+    patches = _im2col(x)
+    y = linear(patches, params["w"], params.get("b"), ftc=ftc, name=name)
+    return tag(probe, f"{name}/out", y)
+
+
+def _conv_init(key, cin, cout, dtype=jnp.float32):
+    return {"w": dense_init(key, 9 * cin, cout, dtype),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def init_cnn(key, cfg: CNNConfig):
+    ks = iter(jax.random.split(key, 32))
+    p: dict = {}
+    cin = cfg.in_channels
+    if cfg.arch == "vgg":
+        # VGG-style: [conv, conv, pool] per stage
+        for si, c in enumerate(cfg.channels):
+            p[f"s{si}_c0"] = _conv_init(next(ks), cin, c)
+            p[f"s{si}_c1"] = _conv_init(next(ks), c, c)
+            cin = c
+    elif cfg.arch == "resnet":
+        p["stem"] = _conv_init(next(ks), cin, cfg.channels[0])
+        cin = cfg.channels[0]
+        for si, c in enumerate(cfg.channels):
+            p[f"s{si}_c0"] = _conv_init(next(ks), cin, c)
+            p[f"s{si}_c1"] = _conv_init(next(ks), c, c)
+            if cin != c:
+                p[f"s{si}_proj"] = {"w": dense_init(next(ks), cin, c,
+                                                    jnp.float32)}
+            cin = c
+    else:
+        raise ValueError(cfg.arch)
+    hw = cfg.hw // (2 ** len(cfg.channels))
+    p["head"] = {"w": dense_init(next(ks), hw * hw * cin, cfg.n_classes,
+                                 jnp.float32),
+                 "b": jnp.zeros((cfg.n_classes,), jnp.float32)}
+    return p
+
+
+def _pool(x):
+    B, H, W, C = x.shape
+    return x.reshape(B, H // 2, 2, W // 2, 2, C).max((2, 4))
+
+
+def apply_cnn(params, cfg: CNNConfig, images, probe=None, ftc=None):
+    x = images
+    if cfg.arch == "vgg":
+        for si in range(len(cfg.channels)):
+            x = jax.nn.relu(conv(params[f"s{si}_c0"], x, f"s{si}_c0",
+                                 probe, ftc))
+            x = jax.nn.relu(conv(params[f"s{si}_c1"], x, f"s{si}_c1",
+                                 probe, ftc))
+            x = _pool(x)
+    else:
+        x = jax.nn.relu(conv(params["stem"], x, "stem", probe, ftc))
+        for si in range(len(cfg.channels)):
+            h = jax.nn.relu(conv(params[f"s{si}_c0"], x, f"s{si}_c0",
+                                 probe, ftc))
+            h = conv(params[f"s{si}_c1"], h, f"s{si}_c1", probe, ftc)
+            sc = x
+            if f"s{si}_proj" in params:
+                sc = linear(x, params[f"s{si}_proj"]["w"], ftc=ftc,
+                            name=f"s{si}_proj")
+            x = jax.nn.relu(h + sc)
+            x = _pool(x)
+    x = x.reshape(x.shape[0], -1)
+    return linear(x, params["head"]["w"], params["head"]["b"], ftc=ftc,
+                  name="head")
+
+
+def xent_loss(logits, labels):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return (lse - ll).mean()
+
+
+def accuracy(logits, labels):
+    return (jnp.argmax(logits, -1) == labels).mean()
+
+
+def train_cnn(key, cfg: CNNConfig, steps: int = 300, batch: int = 64,
+              lr: float = 3e-3, data_seed: int = 99, noise: float = 0.4):
+    """Quick SGD+momentum training on the procedural vision set; returns
+    (params, final train accuracy)."""
+    from repro.data.pipeline import vision_batch
+    params = init_cnn(key, cfg)
+    mom = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, mom, k):
+        imgs, labels = vision_batch(k, batch, cfg.n_classes, cfg.hw,
+                                    noise=noise, seed=data_seed)
+        def loss_fn(p):
+            return xent_loss(apply_cnn(p, cfg, imgs), labels)
+        g = jax.grad(loss_fn)(params)
+        mom = jax.tree.map(lambda m, gg: 0.9 * m + gg, mom, g)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        return params, mom
+
+    for i in range(steps):
+        params, mom = step(params, mom, jax.random.fold_in(key, i))
+    imgs, labels = vision_batch(jax.random.PRNGKey(7), 512, cfg.n_classes,
+                                cfg.hw, noise=noise, seed=data_seed)
+    acc = float(accuracy(apply_cnn(params, cfg, imgs), labels))
+    return params, acc

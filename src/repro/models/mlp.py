@@ -1,0 +1,29 @@
+"""Dense (G)LU feed-forward block."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.common import activation, dense_init, linear, tag, ac
+
+
+def init(key, cfg, dtype, d_ff=None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], D, F, dtype),
+         "wo": dense_init(ks[1], F, D, dtype)}
+    if cfg.glu:
+        p["wg"] = dense_init(ks[2], D, F, dtype)
+    return p
+
+
+def apply(p, x, cfg, probe=None, ftc=None, name="mlp"):
+    act = activation(cfg.act)
+    h = linear(x, p["wi"], ftc=ftc, name=f"{name}/wi")
+    if cfg.glu:
+        g = linear(x, p["wg"], ftc=ftc, name=f"{name}/wg")
+        h = act(h) * g
+    else:
+        h = act(h)
+    h = ac(h, "dp", None, "tp")
+    h = tag(probe, f"{name}/hidden", h)
+    return linear(h, p["wo"], ftc=ftc, name=f"{name}/wo")

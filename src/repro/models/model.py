@@ -1,0 +1,164 @@
+"""Public model API: build a Model from (ModelConfig, RunConfig).
+
+All entry points are pure functions of pytrees, ready for jax.jit with
+sharding annotations from repro.parallel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import attention, rglru, ssm, transformer as T
+from repro.models.common import dtype_of, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    run: RunConfig = RunConfig()
+
+    # ------------------------------------------------------------ params --
+    def init(self, key) -> dict:
+        return T.init_params(key, self.cfg, self.run)
+
+    # -------------------------------------------------------------- train --
+    def loss(self, params, batch, probe=None, ftc=None):
+        cfg, run = self.cfg, self.run
+        if ftc is None and run.ft_emu:
+            from repro.models.common import EmuCtx
+            ftc = EmuCtx(run.ft_emu, run.ft_s_th)
+        x, labels, mask, enc_inp = T.assemble_inputs(params, cfg, batch)
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = T.encode(params, enc_inp, cfg=cfg, run=run,
+                               probe=probe, ftc=ftc)
+        h, _, aux = T.backbone(params, x, cfg=cfg, run=run, mode="train",
+                               probe=probe, ftc=ftc, enc_out=enc_out)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        nll = T.chunked_xent(params, cfg, run, h, labels, mask)
+        return nll + aux, {"nll": nll, "aux": aux}
+
+    # ------------------------------------------------------------ prefill --
+    def prefill(self, params, batch, max_len: int | None = None):
+        """Forward over a prompt, building the KV/state caches.  `max_len`
+        reserves decode headroom in full-attention caches.
+        Returns (caches, last_token_logits)."""
+        cfg, run = self.cfg, self.run
+        x, _, _, enc_inp = T.assemble_inputs(params, cfg, batch)
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = T.encode(params, enc_inp, cfg=cfg, run=run)
+        h, caches, _ = T.backbone(params, x, cfg=cfg, run=run, mode="prefill",
+                                  enc_out=enc_out)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        if max_len is not None and caches is not None:
+            S = x.shape[1]
+            pad = max(max_len - S, 0)
+
+            def grow(path, leaf):
+                # full-attention k/v caches have length S; rolling/state
+                # caches are shorter and keep their capacity; cross-attn
+                # caches are fixed to the encoder length.  Scan-stacked
+                # caches (seg*) carry the length on axis 2 (axis 0 = block
+                # stack, axis 1 = batch); unrolled ones on axis 1.
+                names = [getattr(k, "key", None) for k in path]
+                if "cross" in names:
+                    return leaf
+                axis = 2 if str(names[0]).startswith("seg") else 1
+                if (pad and leaf.ndim > axis and leaf.shape[axis] == S):
+                    cfgpad = [(0, 0)] * leaf.ndim
+                    cfgpad[axis] = (0, pad)
+                    return jnp.pad(leaf, cfgpad)
+                return leaf
+
+            caches = jax.tree_util.tree_map_with_path(grow, caches)
+        return caches, T.last_logits(params, cfg, h)
+
+    # ------------------------------------------------------------- decode --
+    def decode_step(self, params, caches, token, pos):
+        """One-token decode.  token: (B,) int32; pos: () int32 (position of
+        this token).  Returns (new_caches, logits (B, V))."""
+        cfg, run = self.cfg, self.run
+        B = token.shape[0]
+        x = T.embed_tokens(params, cfg, token[:, None])
+        positions = jnp.broadcast_to(pos, (B, 1))
+        h, new_caches, _ = T.backbone(params, x, cfg=cfg, run=run,
+                                      mode="decode", caches=caches,
+                                      positions=positions)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return new_caches, T.last_logits(params, cfg, h)
+
+    # -------------------------------------------------------------- specs --
+    def init_cache(self, batch: int, seq_len: int):
+        """Zero caches sized for decoding at context length seq_len."""
+        cfg, run = self.cfg, self.run
+        dtype = dtype_of(run.compute_dtype)
+
+        def layer_cache(kind):
+            if kind in ("G", "L"):
+                c = attention.init_cache(cfg, kind, batch, seq_len, dtype)
+                if cfg.enc_dec:
+                    c = {"attn": c, "cross": {
+                        "ck": jnp.zeros((batch, seq_len, cfg.n_kv_heads,
+                                         cfg.d_head), dtype),
+                        "cv": jnp.zeros((batch, seq_len, cfg.n_kv_heads,
+                                         cfg.d_head), dtype)}}
+                    return c
+                return {"attn": c}
+            if kind == "R":
+                return {"rglru": {
+                    "h": jnp.zeros((batch, cfg.rglru_width), jnp.float32),
+                    "conv": jnp.zeros((batch, cfg.rglru_conv - 1,
+                                       cfg.rglru_width), dtype)}}
+            if kind == "S":
+                d_inner, H = ssm.dims(cfg)
+                s = cfg.ssm
+                return {"ssd": {
+                    "state": jnp.zeros((batch, H, s.head_dim, s.d_state),
+                                       jnp.float32),
+                    "conv": jnp.zeros((batch, s.conv_width - 1,
+                                       d_inner + 2 * s.d_state), dtype)}}
+            raise ValueError(kind)
+
+        if cfg.unroll:
+            return {f"l{i}": layer_cache(k)
+                    for i, k in enumerate(T._layer_kinds(cfg))}
+        caches = {}
+        for si, (pattern, n_rep) in enumerate(cfg.segments):
+            blk = {f"s{j}": layer_cache(kind)
+                   for j, kind in enumerate(pattern)}
+            caches[f"seg{si}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_rep,) + x.shape)
+                .copy() if hasattr(x, "copy") else x, blk)
+        return caches
+
+    def batch_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStructs for one input batch of the given shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dtype = dtype_of(self.run.compute_dtype)
+        if cfg.frontend == "vision":
+            P = cfg.n_frontend_tokens
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - P), jnp.int32),
+                "patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), dtype),
+            }
+        if cfg.enc_dec:
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    def cache_specs(self, batch: int, seq_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, seq_len))
+
+    def param_specs(self, seed: int = 0):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(seed)))
+
+
+def build(cfg: ModelConfig, run: RunConfig | None = None) -> Model:
+    return Model(cfg, run or RunConfig())

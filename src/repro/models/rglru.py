@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Gated linear recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t).  As in the RecurrentGemma
+reference, the recurrence/input gates are *block-diagonal* linears (one block
+per head) — so with heads sharded over 'model' the whole recurrence is
+communication-free.  Train/prefill uses a log-depth associative scan over the
+sequence; decode is an O(1) state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, linear, tag, ac
+
+C_FACTOR = 8.0
+
+
+def _gate_init(key, heads, bw, dtype):
+    ks = jax.random.split(key, heads)
+    return jnp.stack([dense_init(k, bw, bw, dtype) for k in ks])
+
+
+def init(key, cfg, dtype):
+    D, W = cfg.d_model, cfg.rglru_width
+    nh = max(cfg.n_heads, 1)
+    assert W % nh == 0
+    bw = W // nh
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], D, W, dtype),
+        "w_gate": dense_init(ks[1], D, W, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru_conv, W), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        # block-diagonal gate weights: (heads, bw, bw)
+        "w_a": _gate_init(ks[3], nh, bw, dtype),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_i": _gate_init(ks[4], nh, bw, dtype),
+        "b_i": jnp.zeros((W,), jnp.float32),
+        # init recurrence decay in a stable range (a ~ 0.9..0.999)
+        "lam": jnp.linspace(0.3, 1.5, W).astype(jnp.float32),
+        "w_out": dense_init(ks[5], W, D, dtype),
+    }
+
+
+def _conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+               for i in range(K)) + b[None, None, :]
+
+
+def _block_diag(x, w):
+    """x: (B,S,W) -> (B,S,W) through per-head (bw x bw) blocks."""
+    nh, bw, _ = w.shape
+    B, S, W = x.shape
+    xh = x.reshape(B, S, nh, bw)
+    y = jnp.einsum("bshw,hwv->bshv", xh, w)
+    return y.reshape(B, S, W)
+
+
+def _recurrence(a, bx):
+    """h_t = a_t h_{t-1} + bx_t via associative scan over axis 1."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def apply(p, x, *, cfg, run, positions=None, probe=None, ftc=None,
+          name="rglru", cache=None, mode="train"):
+    """Returns (out, new_cache).  cache: {'h': (B,W), 'conv': (B,K-1,W)}."""
+    B = x.shape[0]
+    gate = jax.nn.gelu(linear(x, p["w_gate"], ftc=ftc, name=f"{name}/w_gate"))
+    xb = linear(x, p["w_x"], ftc=ftc, name=f"{name}/w_x")
+
+    if mode == "decode":
+        K = cfg.rglru_conv
+        hist = jnp.concatenate([cache["conv"], xb], axis=1)
+        xc = (jnp.einsum("bkc,kc->bc", hist, p["conv_w"])
+              + p["conv_b"])[:, None, :]
+        new_conv = hist[:, 1:]
+    else:
+        xc = _conv(xb, p["conv_w"], p["conv_b"])
+        new_conv = xb[:, -(cfg.rglru_conv - 1):]
+    xc = ac(xc, "dp", None, "tp")
+
+    r = jax.nn.sigmoid(_block_diag(xc, p["w_a"]).astype(jnp.float32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid(_block_diag(xc, p["w_i"]).astype(jnp.float32)
+                       + p["b_i"])
+    r = ac(r, "dp", None, "tp")
+    i = ac(i, "dp", None, "tp")
+    xf = xc.astype(jnp.float32)
+    log_a = -C_FACTOR * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9))
+    bx = beta * (i * xf)
+
+    if mode == "decode":
+        h = a[:, 0] * cache["h"] + bx[:, 0]
+        new_cache = {"h": h, "conv": new_conv}
+        hseq = h[:, None, :]
+    else:
+        hseq = _recurrence(a, bx)
+        new_cache = ({"h": hseq[:, -1], "conv": new_conv}
+                     if mode == "prefill" else cache)
+    hseq = ac(hseq, "dp", None, "tp")
+
+    y = (hseq * gate.astype(jnp.float32)).astype(x.dtype)
+    y = tag(probe, f"{name}/out", y)
+    return linear(y, p["w_out"], ftc=ftc, name=f"{name}/w_out"), new_cache

@@ -1,0 +1,171 @@
+"""Mamba2 SSD (state-space duality) block.
+
+Chunked SSD algorithm: within-chunk quadratic term + across-chunk state
+recurrence via lax.scan, processing one chunk at a time so the largest live
+buffer is O(B * H * Lc^2) — bounded regardless of sequence length.  Decode is
+an O(1) state update.  Heads shard over the TP axis; batch over DP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, linear, rms_norm, tag, ac
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def init(key, cfg, dtype):
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H = dims(cfg)
+    # single group (G=1) B/C projections, standard for mamba2
+    ks = jax.random.split(key, 5)
+    conv_ch = d_inner + 2 * s.d_state
+    p = {
+        # order: [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], D, 2 * d_inner + 2 * s.d_state + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], d_inner, D, dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + b[None, None, :]
+
+
+def _split(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, H = dims(cfg)
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + s.d_state,
+                 2 * d_inner + 2 * s.d_state], axis=-1)
+    return z, x, B, C, dt
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk):
+    """SSD over full sequences.  x:(B,S,H,P) dt:(B,S,H) A:(H,) Bm/Cm:(B,S,N).
+    Returns (y, final_state) with state (B,H,P,N)."""
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]              # positive decay rates
+    seg = jnp.cumsum(dA, axis=2)                   # (B,nc,L,H)
+
+    def body(state, inp):
+        xi, dti, Bi, Ci, segi = inp                # leading axis nc scanned out
+        # in-chunk quadratic term
+        Lmat = segi[:, :, None, :] - segi[:, None, :, :]   # (B,Lq,Lk,H)
+        iq = jnp.arange(segi.shape[1])
+        causal = iq[:, None] >= iq[None, :]
+        # mask BEFORE exp so masked entries never overflow (grad-safe)
+        Lmat = jnp.where(causal[None, :, :, None], Lmat, jnp.inf)
+        dec = jnp.exp(-Lmat)
+        scores = jnp.einsum("bqn,bkn->bqk", Ci, Bi)[..., None] * dec
+        y_intra = jnp.einsum("bqkh,bkh,bkhp->bqhp", scores, dti, xi)
+        # contribution of the carried state
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", Ci, state,
+                             jnp.exp(-segi))
+        # update state: S' = exp(-seg_last) decayed S + sum_k exp(-(seg_last-seg_k)) dt_k B_k x_k
+        seg_last = segi[:, -1:, :]                 # (B,1,H)
+        w = jnp.exp(-(seg_last - segi)) * dti      # (B,L,H)
+        state_new = (state * jnp.exp(-seg_last)[:, 0, :, None, None]
+                     + jnp.einsum("bkh,bkn,bkhp->bhpn", w, Bi, xi))
+        return state_new, y_intra + y_inter
+
+    state0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dtc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(seg, 1, 0).astype(jnp.float32))
+    state, yc = jax.lax.scan(body, state0, xs)
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, H, Pd)
+    return y, state
+
+
+def apply(p, x, *, cfg, run, positions=None, probe=None, ftc=None,
+          name="ssd", cache=None, mode="train"):
+    """Mamba2 mixer.  Returns (out, new_cache)."""
+    s = cfg.ssm
+    d_inner, H = dims(cfg)
+    B = x.shape[0]
+    zxbcdt = linear(x, p["in_proj"], ftc=ftc, name=f"{name}/in_proj")
+    z, xi, Bm, Cm, dt = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+
+    if mode == "decode":
+        # conv state: last K-1 inputs  (B, K-1, C)
+        K = s.conv_width
+        hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,C)
+        conv_out = (jnp.einsum("bkc,kc->bc", hist, p["conv_w"])
+                    + p["conv_b"])[:, None, :]
+        new_conv = hist[:, 1:]
+    else:
+        conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+        new_conv = conv_in[:, -(s.conv_width - 1):]
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+
+    xh = xi.reshape(B, -1, H, s.head_dim)
+    xh = ac(xh, "dp", None, "tp", None)
+    A = jnp.exp(p["A_log"])
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    if mode == "decode":
+        state = cache["state"]                     # (B,H,P,N)
+        dA = jnp.exp(-dt_s[:, 0, :] * A[None, :])  # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt_s[:, 0, :],
+                         Bm[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        state = state * dA[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), state)
+        y = y[:, None].reshape(B, 1, H, s.head_dim)
+        new_cache = {"state": state, "conv": new_conv}
+    else:
+        S_in = xh.shape[1]
+        rem = S_in % s.chunk
+        if rem:
+            # pad to a chunk multiple; padded steps get dt=0 so they neither
+            # decay nor write the state, and their outputs are discarded.
+            pad = s.chunk - rem
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+            dt_s = jnp.pad(dt_s, ((0, 0), (0, pad), (0, 0)))
+        y, state = ssd_chunked(xh, dt_s, A, Bm, Cm, s.chunk)
+        if rem:
+            y, xh = y[:, :S_in], xh[:, :S_in]
+        y = y.reshape(B, -1, H, s.head_dim)
+        new_cache = ({"state": state, "conv": new_conv}
+                     if mode == "prefill" else cache)
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, -1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = tag(probe, f"{name}/out", y)
+    return linear(y, p["out_proj"], ftc=ftc, name=f"{name}/out_proj"), new_cache

@@ -1,0 +1,1 @@
+from repro.parallel.ctx import MeshCtx, ac, get_ctx, mesh_ctx, set_ctx  # noqa: F401

@@ -1,0 +1,89 @@
+"""Mesh context: logical-axis resolution for model code.
+
+Model code never names physical mesh axes; it uses logical names:
+  "dp"  — batch/data-parallel axes (('pod','data') multi-pod, ('data',) else)
+  "tp"  — tensor-parallel axis ('model')
+  "fsdp"— weight-sharding axes (== dp axes)
+A context object resolves them; when no context is set (plain CPU tests) the
+constraints become no-ops and MoE runs its single-shard path on a 1x1 mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+    dp: tuple[str, ...] = ("data",)
+    tp: str = "model"
+
+    @property
+    def dp_size(self) -> int:
+        return int(__import__("math").prod(self.mesh.shape[a] for a in self.dp))
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.tp])
+
+    def resolve(self, *logical) -> P:
+        """Map logical axis names to a PartitionSpec."""
+        out = []
+        for ax in logical:
+            if ax is None:
+                out.append(None)
+            elif ax == "dp":
+                out.append(self.dp if len(self.dp) > 1 else self.dp[0])
+            elif ax == "tp":
+                out.append(self.tp)
+            else:
+                raise ValueError(f"unknown logical axis {ax!r}")
+        return P(*out)
+
+    def sharding(self, *logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(*logical))
+
+
+_CTX: list[MeshCtx | None] = [None]
+
+
+def get_ctx() -> MeshCtx | None:
+    return _CTX[0]
+
+
+def set_ctx(ctx: MeshCtx | None):
+    _CTX[0] = ctx
+
+
+@contextlib.contextmanager
+def mesh_ctx(ctx: MeshCtx | None):
+    prev = _CTX[0]
+    _CTX[0] = ctx
+    try:
+        yield ctx
+    finally:
+        _CTX[0] = prev
+
+
+def ac(x: jax.Array, *logical):
+    """Activation sharding constraint (no-op without a mesh context), with
+    divisibility fallback: a dim that doesn't divide is left unsharded."""
+    ctx = get_ctx()
+    if ctx is None:
+        return x
+    spec = []
+    for dim, ax in enumerate(logical):
+        if ax is None:
+            spec.append(None)
+            continue
+        size = ctx.dp_size if ax == "dp" else ctx.tp_size
+        if x.shape[dim] % size == 0:
+            spec.append(ctx.resolve(ax)[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))

@@ -1,0 +1,67 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+The decode step donates its caches, so serving memory is a single cache
+allocation regardless of generation length.  Works on any mesh: the cache is
+batch-sharded over DP and head-sharded over 'model' (see parallel.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding as S
+from repro.parallel.ctx import mesh_ctx
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model, params, mesh=None, cfg: ServeConfig | None = None):
+        self.model, self.params = model, params
+        self.mesh = mesh
+        self.cfg = cfg or ServeConfig()
+        ctx = S.make_ctx(mesh) if mesh is not None else None
+
+        def _prefill(params, batch, max_len):
+            with mesh_ctx(ctx):
+                return model.prefill(params, batch, max_len=max_len)
+
+        def _decode(params, caches, token, pos):
+            with mesh_ctx(ctx):
+                return model.decode_step(params, caches, token, pos)
+
+        self._prefill = jax.jit(_prefill, static_argnums=(2,))
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    def generate(self, batch, max_new_tokens: int | None = None):
+        """batch: model input dict (prompts).  Returns (B, new) tokens."""
+        n_new = max_new_tokens or self.cfg.max_new_tokens
+        prompt_len = batch["tokens"].shape[1]
+        if self.model.cfg.frontend == "vision":
+            prompt_len += self.model.cfg.n_frontend_tokens
+        max_len = prompt_len + n_new
+        caches, logits = self._prefill(self.params, batch, max_len)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        out = []
+        tok = self._sample(logits, key)
+        for i in range(n_new):
+            out.append(tok)
+            caches, logits = self._decode(
+                self.params, caches, tok,
+                jnp.asarray(prompt_len + i, jnp.int32))
+            key = jax.random.fold_in(key, i)
+            tok = self._sample(logits, key)
+        return jnp.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)

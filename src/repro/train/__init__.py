@@ -1,0 +1,4 @@
+from repro.train.train_step import (  # noqa: F401
+    init_state, make_decode_step, make_prefill_step, make_train_step,
+    state_shardings)
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,111 @@
+"""Step-atomic sharded checkpointing with async write and resume-latest.
+
+Layout:  <dir>/step_<N>/   arrays.npz (one entry per flattened leaf path)
+                           meta.json  {step, names, data_state}
+         <dir>/step_<N>.done          (atomic commit marker)
+
+On a real multi-host fleet each host writes only the shards it owns (the
+leaf-path file naming already supports per-shard suffixes); on this single-
+host substrate leaves are written whole.  Restore validates the commit marker
+so a half-written checkpoint from a killed run is never loaded — that plus
+resume-latest gives crash-consistent restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out[name] = np.asarray(leaf)
+    return out
+
+
+def save(ckpt_dir: str, state, step: int, data_state: dict | None = None,
+         keep: int = 3, async_write: bool = False):
+    """Write checkpoint for `step`.  Returns the (possibly async) waiter."""
+    arrays = _flatten(state)
+
+    def _write():
+        os.makedirs(ckpt_dir, exist_ok=True)
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "names": sorted(arrays),
+                       "data_state": data_state or {}}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        open(final + ".done", "w").close()
+        _gc(ckpt_dir, keep)
+
+    if async_write:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(available_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+        try:
+            os.remove(os.path.join(ckpt_dir, f"step_{s}.done"))
+        except OSError:
+            pass
+
+
+def available_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for n in os.listdir(ckpt_dir):
+        if n.startswith("step_") and not n.endswith(".done"):
+            if os.path.exists(os.path.join(ckpt_dir, n + ".done")):
+                out.append(int(n.split("_")[1]))
+    return sorted(out)
+
+
+def restore(ckpt_dir: str, like, step: int | None = None,
+            shardings=None):
+    """Restore the latest (or given) committed step into the structure of
+    `like`.  With `shardings`, leaves are device_put with the target sharding
+    — this is also the elastic-rescale path: a checkpoint written on one mesh
+    restores onto any other mesh.  Returns (state, step, data_state)."""
+    steps = available_steps(ckpt_dir)
+    if not steps:
+        return None, -1, {}
+    step = steps[-1] if step is None else step
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    z = np.load(os.path.join(d, "arrays.npz"))
+    meta = json.load(open(os.path.join(d, "meta.json")))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    sh_flat = (jax.tree.leaves(shardings) if shardings is not None
+               else [None] * len(flat))
+    leaves = []
+    for (path, leaf), sh in zip(flat, sh_flat):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        arr = z[name]
+        assert arr.shape == tuple(leaf.shape), (name, arr.shape, leaf.shape)
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+    state = jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+    return state, step, meta.get("data_state", {})

@@ -1,0 +1,46 @@
+"""Elastic re-meshing: continue training after losing (or gaining) hosts.
+
+The FSDP ('data') axis absorbs the size change; 'model' stays fixed so the
+TP layout (and therefore every kernel's tile shapes) is stable.  Because
+checkpoints are mesh-agnostic (named leaves, full logical shapes), rescaling
+is: build new mesh -> recompute shardings -> restore -> continue.  The
+global batch is preserved by raising grad_accum when the DP world shrinks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.parallel import sharding as S
+from repro.train import checkpoint as ckpt
+from repro.train.train_step import state_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_dp: int
+    new_dp: int
+    grad_accum_scale: int   # multiply RunConfig.grad_accum by this
+
+    @property
+    def changed(self) -> bool:
+        return self.old_dp != self.new_dp
+
+
+def plan_rescale(old_mesh, surviving_devices: int, model_axis: int) -> ElasticPlan:
+    """Choose the largest data axis that fits the survivors."""
+    old_dp = old_mesh.shape.get("data", 1) * old_mesh.shape.get("pod", 1)
+    new_dp = max(surviving_devices // model_axis, 1)
+    # keep global batch: if dp halves, double accumulation
+    scale = max(old_dp // new_dp, 1)
+    return ElasticPlan(old_dp=old_dp, new_dp=new_dp, grad_accum_scale=scale)
+
+
+def remesh_restore(ckpt_dir: str, like_state, new_mesh):
+    """Restore the latest checkpoint onto a new mesh's shardings."""
+    sh = state_shardings(like_state, new_mesh)
+    state, step, dstate = ckpt.restore(ckpt_dir, like_state, shardings=sh)
+    if state is None:
+        raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    return state, step, dstate, S.make_ctx(new_mesh)

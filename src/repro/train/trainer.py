@@ -1,0 +1,123 @@
+"""Training loop with cluster-level fault tolerance.
+
+- step-atomic checkpoints (async write) + resume-from-latest with data state
+- straggler mitigation: steps slower than `straggler_factor` x the running
+  median are logged and counted; past `straggler_patience` consecutive slow
+  steps the trainer requests a checkpoint so a reschedule loses nothing
+  (on CPU CI this is exercised via an injected delay hook)
+- elastic re-mesh: on simulated node loss, rebuild the mesh from survivors
+  and restore the state onto the new shardings (see repro.train.elastic)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+
+from repro.data.pipeline import DataConfig, LMIterator
+from repro.optim import AdamWConfig
+from repro.train import checkpoint as ckpt
+from repro.train.train_step import init_state, make_train_step, state_shardings
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_async: bool = True
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_patience: int = 3
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model, shape, opt_cfg: AdamWConfig | None = None,
+                 cfg: TrainerConfig | None = None, mesh=None,
+                 data_cfg: DataConfig | None = None,
+                 delay_hook=None):
+        self.model, self.shape = model, shape
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.cfg = cfg or TrainerConfig()
+        self.mesh = mesh
+        self.delay_hook = delay_hook  # tests inject artificial stragglers
+        self.data = LMIterator(model.cfg, shape, data_cfg)
+        _, self.jit_step = make_train_step(model, self.opt_cfg, mesh=mesh)
+        self.metrics_log: list[dict] = []
+        self.straggler_events = 0
+        self._slow_streak = 0
+
+    # ------------------------------------------------------------ state ---
+    def init_or_restore(self):
+        like = jax.eval_shape(
+            lambda k: init_state(self.model, k, self.opt_cfg),
+            jax.random.PRNGKey(self.cfg.seed))
+        sh = (state_shardings(like, self.mesh) if self.mesh is not None
+              else None)
+        state, step, dstate = ckpt.restore(self.cfg.ckpt_dir, like,
+                                           shardings=sh)
+        if state is None:
+            state = init_state(self.model, jax.random.PRNGKey(self.cfg.seed),
+                               self.opt_cfg)
+            step = 0
+        else:
+            step = int(step)
+            self.data.restore(dstate)
+        return state, step
+
+    # ------------------------------------------------------------- loop ---
+    def run(self, state=None, start_step: int | None = None):
+        if state is None:
+            state, start_step = self.init_or_restore()
+        step = start_step or 0
+        durations: list[float] = []
+        waiter = None
+        while step < self.cfg.total_steps:
+            batch = next(self.data)
+            t0 = time.monotonic()
+            if self.delay_hook is not None:
+                self.delay_hook(step)
+            state, metrics = self.jit_step(state, batch)
+            loss = float(metrics["loss"])  # blocks; also a health check
+            dt = time.monotonic() - t0
+            durations.append(dt)
+            med = sorted(durations)[len(durations) // 2]
+            is_straggler = (len(durations) >= 5
+                            and dt > self.cfg.straggler_factor * med)
+            if is_straggler:
+                self.straggler_events += 1
+                self._slow_streak += 1
+            else:
+                self._slow_streak = 0
+            step += 1
+            row = {"step": step, "loss": loss, "sec": dt,
+                   "straggler": is_straggler,
+                   "grad_norm": float(metrics["grad_norm"])}
+            self.metrics_log.append(row)
+            if step % self.cfg.log_every == 0:
+                print(json.dumps(row))
+            must_ckpt = (step % self.cfg.ckpt_every == 0
+                         or step == self.cfg.total_steps
+                         or self._slow_streak >= self.cfg.straggler_patience)
+            if must_ckpt:
+                if waiter is not None:
+                    waiter.join()
+                waiter = ckpt.save(self.cfg.ckpt_dir, state, step,
+                                   data_state=self.data.state(),
+                                   keep=self.cfg.keep,
+                                   async_write=self.cfg.ckpt_async)
+                self._slow_streak = 0
+        if waiter is not None:
+            waiter.join()
+        return state, step
+
+    def save_metrics(self, path: str):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            for row in self.metrics_log:
+                f.write(json.dumps(row) + "\n")

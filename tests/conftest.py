@@ -1,0 +1,18 @@
+import os
+import sys
+
+# single-device for smoke tests (the dry-run forces 512 in its own process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """JIT executables accumulate across the ~190-test suite (hypothesis
+    sweeps + many static FT configs) to tens of GB; bound it per module."""
+    yield
+    jax.clear_caches()

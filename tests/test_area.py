@@ -1,0 +1,73 @@
+import pytest
+
+from repro.core import area as A
+
+
+def test_pp_counts():
+    assert A.pp_count(0) == 1
+    assert A.pp_count(7) == 8
+    assert A.pp_count(14) == 1
+    assert A.pp_count(15) == 0
+    assert sum(A.pp_count(c) for c in range(16)) == 64  # 8x8 partial products
+
+
+def test_important_columns_match_paper_examples():
+    # paper Fig. 2: s=2 unconstrained => multiplier columns 6..15
+    assert A.important_columns(2, 0) == (6, 15)
+    # paper: Q_scale=5, s=2 => columns 11..15
+    assert A.important_columns(2, 5) == (11, 15)
+
+
+def test_quant_constraint_shrinks_protected_region():
+    for s in (1, 2, 3):
+        lo0, hi0 = A.important_columns(s, 0)
+        lo7, hi7 = A.important_columns(s, 7)
+        assert hi0 - lo0 >= hi7 - lo7
+
+
+def test_direct_vs_configurable():
+    for s in (1, 2, 3):
+        for q in (0, 4, 7):
+            d = A.bit_protect_cost(s, q, "direct").total
+            c = A.bit_protect_cost(s, q, "configurable").total
+            assert c <= d * 1.05  # configurable never meaningfully worse
+
+
+def test_full_tmr_is_about_3x():
+    r = A.full_tmr_pe_cost() / A.pe_cost()
+    assert 3.0 <= r <= 3.5
+
+
+def test_paper_71_percent_reduction_claim():
+    """Constrained reconfigurable redundancy ~71.4% below unconstrained
+    direct (paper Section IV-E) — we accept 60-85%."""
+    reductions = []
+    for s in (1, 2, 3):
+        d0 = A.bit_protect_cost(s, 0, "direct").total
+        c7 = A.bit_protect_cost(s, 7, "configurable").total
+        reductions.append(1 - c7 / d0)
+    avg = sum(reductions) / len(reductions)
+    assert 0.60 <= avg <= 0.85, avg
+
+
+def test_area_monotone_in_bits():
+    costs = [A.bit_protect_cost(s, 4, "configurable").total
+             for s in (1, 2, 3, 4)]
+    assert costs == sorted(costs)
+
+
+def test_array_area_breakdown():
+    r = A.array_area(32, nb_th=1, q_scale=7, pe_policy="configurable",
+                     dot_size=52, ib_th=2)
+    assert r["overhead"] > 0
+    assert r["dppu"] < r["array"]  # DPPU much smaller than the 2-D array
+    # paper: low-protection settings keep overhead small (<40%)
+    assert r["overhead"] < 0.4
+
+
+def test_dppu_bits_cheap_array_bits_costly():
+    """Fig. 12: raising IB_TH (DPPU) is much cheaper than raising NB_TH."""
+    base = A.array_area(32, 1, 7, "configurable", 52, 2)["overhead"]
+    up_ib = A.array_area(32, 1, 7, "configurable", 52, 4)["overhead"]
+    up_nb = A.array_area(32, 3, 7, "configurable", 52, 2)["overhead"]
+    assert up_ib - base < (up_nb - base) / 4

@@ -1,0 +1,61 @@
+import numpy as np
+
+from repro.core import bayesopt as B
+
+
+def synthetic_eval(cfg):
+    """Area grows with protection; accuracy grows with protection."""
+    prot = cfg["s_th"] * 4 + cfg["ib_th"] * 0.08 + cfg["nb_th"] * 0.3
+    area = prot * (0.5 if cfg["pe_policy"] == "configurable" else 1.0)
+    area += cfg["dot_size"] / 512
+    acc = min(0.70 + prot * 0.25, 0.78)
+    perf = 0.0 if cfg["dot_size"] >= 16 else 0.2
+    bw = cfg["s_th"]
+    return B.EvalResult(area=area, acc=acc, perf_loss=perf, bw_loss=bw)
+
+
+def test_dse_finds_feasible_minimum():
+    cons = B.Constraints(acc_min=0.75, perf_max=0.10, bw_max=0.10)
+    res = B.bayes_design_opt(B.table1_space(), synthetic_eval, cons,
+                             iter_max_step=48, seed=0)
+    assert res.best is not None
+    assert res.best_eval.feasible(cons)
+    # sanity: found area not far above the attainable region
+    feas = [r.area for c, r in res.history if r.feasible(cons)]
+    assert res.best_eval.area == min(feas)
+
+
+def strict_eval(cfg):
+    """Accuracy uncapped and steep: most of the space is infeasible at
+    acc_min=0.80, so dominance pruning has real work to do."""
+    prot = cfg["s_th"] * 4 + cfg["ib_th"] * 0.08 + cfg["nb_th"] * 0.3
+    return B.EvalResult(area=prot, acc=0.70 + prot * 0.08,
+                        perf_loss=0.0, bw_loss=0.0)
+
+
+def test_monotonic_pruning_fires():
+    cons = B.Constraints(acc_min=0.80, perf_max=0.5, bw_max=0.5)
+    total_pruned = 0
+    for seed in range(4):
+        res = B.bayes_design_opt(B.table1_space(), strict_eval, cons,
+                                 iter_max_step=80, n_init=30,
+                                 n_candidates=512, seed=seed)
+        total_pruned += res.pruned
+    assert total_pruned > 0  # infeasible-dominated configs skipped
+
+
+def test_constraints_respected():
+    cons = B.Constraints(acc_min=0.99)  # unattainable
+    res = B.bayes_design_opt(B.table1_space(), synthetic_eval, cons,
+                             iter_max_step=24, seed=2)
+    assert res.best is None
+
+
+def test_gp_posterior_sane():
+    gp = B._GP()
+    X = np.random.default_rng(0).uniform(size=(20, 3))
+    y = X.sum(1)
+    gp.fit(X, y)
+    mu, var = gp.posterior(X[:5])
+    assert np.allclose(mu, y[:5], atol=0.2)
+    assert (var >= 0).all()

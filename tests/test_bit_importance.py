@@ -1,0 +1,43 @@
+from repro.core import bit_importance as BI
+
+
+def test_picks_cheapest_meeting_target():
+    calls = []
+
+    def oracle(ib, nb):
+        calls.append((ib, nb))
+        return 0.5 + 0.05 * ib + 0.04 * nb  # monotone accuracy
+
+    table = {(ib, nb): ib + 3 * nb
+             for ib in range(0, 9) for nb in range(0, ib + 1)}
+    best = BI.get_bit_config(oracle, acc_target=0.80, bits=8,
+                             cost_table=table)
+    assert best is not None
+    assert best.acc >= 0.80
+    # cheapest feasible in this synthetic: maximize ib before nb
+    for (ib, nb), cost in table.items():
+        if nb <= ib and 0.5 + 0.05 * ib + 0.04 * nb >= 0.80:
+            assert best.cost <= cost
+
+
+def test_pruning_skips_dominated_failures():
+    evals = []
+
+    def oracle(ib, nb):
+        evals.append((ib, nb))
+        return 1.0 if (ib >= 6 and nb >= 2) else 0.0
+
+    table = {(ib, nb): ib + nb for ib in range(0, 9)
+             for nb in range(0, ib + 1)}
+    best = BI.get_bit_config(oracle, acc_target=0.5, bits=8,
+                             cost_table=table)
+    assert best is not None and best.ib_th >= 6 and best.nb_th >= 2
+    total = sum(1 for ib in range(1, 9) for nb in range(0, ib + 1))
+    assert len(evals) < total  # pruning actually skipped some
+
+
+def test_infeasible_returns_none():
+    best = BI.get_bit_config(lambda ib, nb: 0.0, acc_target=0.9, bits=4,
+                             cost_table={(i, n): 1.0 for i in range(5)
+                                         for n in range(i + 1)})
+    assert best is None

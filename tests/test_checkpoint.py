@@ -1,0 +1,48 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import checkpoint as C
+
+
+def state():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "m": {"w": jnp.zeros((3, 4))},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    C.save(d, state(), 7, data_state={"step": 7})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state())
+    s, step, ds = C.restore(d, like)
+    assert step == 7 and ds == {"step": 7}
+    np.testing.assert_array_equal(np.asarray(s["params"]["w"]),
+                                  np.arange(12.0).reshape(3, 4))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    d = str(tmp_path / "ck")
+    C.save(d, state(), 5)
+    os.remove(os.path.join(d, "step_5.done"))  # simulate crash mid-commit
+    s, step, _ = C.restore(d, state())
+    assert s is None and step == -1
+
+
+def test_latest_wins_and_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    for i in (1, 2, 3, 4, 5):
+        C.save(d, state(), i, keep=3)
+    assert C.available_steps(d) == [3, 4, 5]
+    _, step, _ = C.restore(d, state())
+    assert step == 5
+
+
+def test_async_save(tmp_path):
+    d = str(tmp_path / "ck")
+    t = C.save(d, state(), 9, async_write=True)
+    t.join()
+    assert C.available_steps(d) == [9]

@@ -1,0 +1,52 @@
+"""End-to-end paper pipeline on the reduced CNN benchmarks: train -> layer
+sensitivity -> selective protection -> accuracy recovery (the system-level
+claims of Figs. 5-7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.evaluate import trained_cnn
+from repro.core.flexhyca import FTConfig
+
+
+@pytest.fixture(scope="module")
+def vgg():
+    return trained_cnn("vgg", steps=200)
+
+
+def test_cnn_trains_above_chance(vgg):
+    assert vgg.clean_acc > 0.6  # 8 classes => chance 0.125
+
+
+def test_faults_degrade_accuracy(vgg):
+    clean = vgg.accuracy(None)
+    faulty = vgg.accuracy(FTConfig(ber=2e-3, strategy="base"))
+    assert faulty < clean - 0.03
+
+
+def test_layer_sensitivity_differs(vgg):
+    sens = vgg.layer_sensitivity(ber=2e-3)
+    vals = np.array(list(sens.values()))
+    assert vals.max() - vals.min() > 0.01  # Fig. 5: layers differ
+
+
+def test_cumulative_protection_monotoneish(vgg):
+    curve = vgg.cumulative_protection(ber=2e-3)
+    accs = [a for _, a in curve]
+    assert accs[-1] > accs[0]  # protecting everything recovers accuracy
+
+
+def test_cl_strategy_recovers_accuracy(vgg):
+    ber = 2e-3
+    base = vgg.accuracy(FTConfig(ber=ber, strategy="base"))
+    cl = vgg.accuracy(FTConfig(ber=ber, strategy="cl", s_th=0.1, ib_th=4,
+                               nb_th=2, q_scale=4))
+    crt3 = vgg.accuracy(FTConfig(ber=ber, strategy="crt3"))
+    assert cl > base + 0.02
+    assert crt3 > base
+
+
+def test_resnet_variant_trains():
+    o = trained_cnn("resnet", steps=200)
+    assert o.clean_acc > 0.5

@@ -1,0 +1,90 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.flexhyca import FTConfig, clean_linear, ft_linear
+
+
+@pytest.fixture(scope="module")
+def xw():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 48))
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 32))
+    return x, w
+
+
+def damage(y, x, w):
+    ref = clean_linear(x, w)
+    return float(jnp.sqrt(jnp.mean((y - ref) ** 2))
+                 / (jnp.sqrt(jnp.mean(ref ** 2)) + 1e-9))
+
+
+def test_zero_ber_matches_clean(xw):
+    x, w = xw
+    cfg = FTConfig(ber=0.0, strategy="cl", q_scale=0)
+    y = ft_linear(jax.random.PRNGKey(0), x, w, cfg,
+                  important=jnp.zeros((32,), bool))
+    assert damage(y, x, w) < 1e-6
+
+
+def test_faults_cause_damage_on_base(xw):
+    x, w = xw
+    cfg = FTConfig(ber=0.01, strategy="base")
+    y = ft_linear(jax.random.PRNGKey(0), x, w, cfg)
+    assert damage(y, x, w) > 0.01
+
+
+def test_crt_protection_monotone(xw):
+    x, w = xw
+    d = []
+    for strat in ("base", "crt1", "crt2", "crt3"):
+        cfg = FTConfig(ber=0.01, strategy=strat, weight_faults=False)
+        y = ft_linear(jax.random.PRNGKey(5), x, w, cfg)
+        d.append(damage(y, x, w))
+    assert d[0] > d[1] > d[3]  # more protected bits, less damage
+
+
+def test_whole_layer_tmr_near_clean(xw):
+    x, w = xw
+    d_prot, d_unprot = [], []
+    for r in range(6):
+        key = jax.random.PRNGKey(100 + r)
+        cfg = FTConfig(ber=0.005, strategy="arch", weight_faults=False)
+        d_prot.append(damage(ft_linear(key, x, w, cfg,
+                                       layer_protected=True), x, w))
+        d_unprot.append(damage(ft_linear(key, x, w, cfg,
+                                         layer_protected=False), x, w))
+    # whole-layer TMR leaves only the 3*ber^2 residual: damage collapses
+    assert np.mean(d_prot) < 0.3 * np.mean(d_unprot)
+
+
+def test_unprotected_layer_in_arch_strategy(xw):
+    x, w = xw
+    cfg = FTConfig(ber=0.01, strategy="arch", weight_faults=False)
+    y = ft_linear(jax.random.PRNGKey(2), x, w, cfg, layer_protected=False)
+    assert damage(y, x, w) > 0.01
+
+
+def test_cl_dppu_protects_important_channels(xw):
+    x, w = xw
+    imp = jnp.zeros((32,), bool).at[:8].set(True)
+    cfg = FTConfig(ber=0.02, strategy="cl", ib_th=8, nb_th=0, q_scale=0,
+                   weight_faults=False)
+    y = ft_linear(jax.random.PRNGKey(3), x, w, cfg, important=imp)
+    ref = clean_linear(x, w, q_scale=0)
+    err_imp = float(jnp.abs(y[:, :8] - ref[:, :8]).mean())
+    err_ord = float(jnp.abs(y[:, 8:] - ref[:, 8:]).mean())
+    assert err_imp < err_ord  # important channels visibly cleaner
+
+
+def test_cl_better_than_base_same_ber(xw):
+    x, w = xw
+    imp = jnp.zeros((32,), bool).at[:4].set(True)
+    base = ft_linear(jax.random.PRNGKey(4), x, w,
+                     FTConfig(ber=0.01, strategy="base"), important=imp)
+    cl = ft_linear(jax.random.PRNGKey(4), x, w,
+                   FTConfig(ber=0.01, strategy="cl", ib_th=3, nb_th=1),
+                   important=imp)
+    assert damage(cl, x, w) < damage(base, x, w)

@@ -1,0 +1,38 @@
+"""FlexHyCA cost-emulation modes (§Perf hillclimb 3) preserve model math:
+the two_pass recompute votes identical values, so outputs must match the
+plain path up to dtype noise — the variants differ only in COST."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import RunConfig
+from repro.models import build
+from repro.models.common import EmuCtx, linear
+
+
+def test_emu_two_pass_is_value_preserving():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    y_plain = linear(x, w)
+    y_2p = linear(x, w, ftc=EmuCtx("two_pass", 0.25))
+    y_fu = linear(x, w, ftc=EmuCtx("fused", 0.25))
+    np.testing.assert_allclose(np.asarray(y_2p), np.asarray(y_plain),
+                               rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(y_fu), np.asarray(y_plain))
+
+
+def test_emu_loss_matches_unprotected():
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab)}
+    runs = [RunConfig(param_dtype="float32", compute_dtype="float32",
+                      ft_emu=m) for m in ("", "two_pass", "fused")]
+    losses = []
+    for run in runs:
+        m = build(cfg, run)
+        params = m.init(jax.random.PRNGKey(0))
+        loss, _ = jax.jit(m.loss)(params, batch)
+        losses.append(float(loss))
+    assert abs(losses[0] - losses[1]) < 1e-4
+    assert abs(losses[0] - losses[2]) < 1e-6

@@ -1,0 +1,117 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(hypothesis property tests; interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.fault_inject.kernel import fault_inject
+from repro.kernels.fault_inject.ops import inject, random_planes
+from repro.kernels.fault_inject.ref import inject_ref
+from repro.kernels.protected_mm.kernel import protected_mm
+from repro.kernels.protected_mm.ops import calibrate_t, ft_linear_fused
+from repro.kernels.protected_mm.ref import protected_mm_ref
+from repro.kernels.qmatmul.kernel import qmatmul
+from repro.kernels.qmatmul.ops import quant_linear
+from repro.kernels.qmatmul.ref import qmatmul_ref
+
+DIMS = st.sampled_from([128, 256, 384])
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=DIMS, k=DIMS, n=st.sampled_from([128, 256]),
+       t=st.integers(0, 16), seed=st.integers(0, 1000))
+def test_qmatmul_matches_oracle(m, k, n, t, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.randint(k1, (m, k), -127, 128, jnp.int8)
+    w = jax.random.randint(k2, (k, n), -127, 128, jnp.int8)
+    y = qmatmul(x, w, t)
+    yr = qmatmul_ref(x, w, t)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_qmatmul_saturation_active():
+    x = jnp.full((128, 512), 127, jnp.int8)
+    w = jnp.full((512, 128), 127, jnp.int8)
+    y = qmatmul(x, w, 0)       # acc would exceed 24-bit without saturation
+    yr = qmatmul_ref(x, w, 0)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    assert int(y.max()) == 127
+
+
+@settings(max_examples=8, deadline=None)
+@given(ber=st.sampled_from([0.0, 0.005, 0.05, 0.3]),
+       nb=st.integers(0, 8), seed=st.integers(0, 1000))
+def test_fault_inject_matches_oracle(ber, nb, seed):
+    M, N = 256, 128
+    x = jax.random.randint(jax.random.PRNGKey(seed), (M, N), -128, 128,
+                           jnp.int32)
+    rnd = random_planes(jax.random.PRNGKey(seed + 1), (M, N))
+    prot = jnp.full((N,), nb, jnp.int32)
+    y = fault_inject(x, rnd, prot, ber)
+    yr = inject_ref(x, rnd, prot, ber)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_fault_inject_protected_bits_invariant():
+    M, N = 512, 128
+    x = jax.random.randint(jax.random.PRNGKey(0), (M, N), -128, 128,
+                           jnp.int32)
+    prot = jnp.full((N,), 3, jnp.int32)
+    y = inject(jax.random.PRNGKey(1), x, prot, ber=0.4)
+    top3 = 0b11100000
+    np.testing.assert_array_equal(np.asarray(x) & top3, np.asarray(y) & top3)
+
+
+def test_fault_inject_deterministic():
+    x = jnp.zeros((256, 128), jnp.int32)
+    prot = jnp.zeros((128,), jnp.int32)
+    y1 = inject(jax.random.PRNGKey(9), x, prot, ber=0.1)
+    y2 = inject(jax.random.PRNGKey(9), x, prot, ber=0.1)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+@settings(max_examples=6, deadline=None)
+@given(ber=st.sampled_from([0.0, 0.01, 0.1]), t=st.integers(0, 12),
+       ib=st.integers(0, 8), seed=st.integers(0, 500))
+def test_protected_mm_matches_oracle(ber, t, ib, seed):
+    M, K, N = 128, 256, 128
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.randint(ks[0], (M, K), -127, 128, jnp.int8)
+    w = jax.random.randint(ks[1], (K, N), -127, 128, jnp.int8)
+    ro = random_planes(ks[2], (M, N))
+    ri = random_planes(ks[3], (M, N))
+    imp = (jnp.arange(N) % 5 == 0).astype(jnp.int32)
+    nb = min(1, ib)
+    y = protected_mm(x, w, ro, ri, imp, t=t, ber=ber, ib=ib, nb=nb)
+    yr = protected_mm_ref(x, w, ro, ri, imp, t=t, ber=ber, ib=ib, nb=nb)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+
+
+def test_ft_linear_fused_clean_matches_quant_linear():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128))
+    t = calibrate_t(x, w, q_scale=0)
+    y_fused = ft_linear_fused(jax.random.PRNGKey(2), x, w,
+                              jnp.zeros((128,), bool), t=t, ber=0.0)
+    y_plain = quant_linear(x, w, t)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_plain),
+                               rtol=1e-6)
+
+
+def test_ft_linear_fused_protection_helps():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128))
+    t = calibrate_t(x, w, q_scale=7)
+    ref = x @ w
+
+    def dmg(y):
+        return float(jnp.sqrt(jnp.mean((y - ref) ** 2)))
+
+    imp = jnp.ones((128,), bool)
+    weak = ft_linear_fused(jax.random.PRNGKey(3), x, w, imp, t=t, ber=0.02,
+                           ib=0, nb=0)
+    strong = ft_linear_fused(jax.random.PRNGKey(3), x, w, imp, t=t, ber=0.02,
+                             ib=8, nb=8)
+    assert dmg(strong) < dmg(weak)

@@ -1,0 +1,54 @@
+from repro.core import perfmodel as P
+
+
+def layers():
+    return P.lm_layer_gemms(6, 256, 1024, 8, 32, 8, seq=512,
+                            sensitive_frac=0.5)
+
+
+def test_base_and_crt_no_perf_loss():
+    cfg = P.DlaConfig(array_dim=32, dot_size=52)
+    assert P.perf_loss(layers(), cfg, "base") == 0.0
+    assert P.perf_loss(layers(), cfg, "crt") == 0.0
+
+
+def test_alg_tmr_triples_sensitive_layers():
+    cfg = P.DlaConfig(array_dim=32)
+    loss = P.perf_loss(layers(), cfg, "alg")
+    # half the layers 3x => total ~2x => loss ~1.0 (paper: "nearly double")
+    assert 0.7 <= loss <= 1.3
+
+
+def test_arch_tmr_similar_to_alg():
+    cfg = P.DlaConfig(array_dim=32)
+    l_arch = P.perf_loss(layers(), cfg, "arch")
+    l_alg = P.perf_loss(layers(), cfg, "alg")
+    assert abs(l_arch - l_alg) < 0.6
+
+
+def test_cl_negligible_with_adequate_dppu():
+    cfg = P.DlaConfig(array_dim=32, dot_size=64)
+    assert P.perf_loss(layers(), cfg, "cl", s_th=0.05) < 0.05
+
+
+def test_cl_degrades_with_tiny_dppu():
+    cfg = P.DlaConfig(array_dim=32, dot_size=1)
+    big = P.perf_loss(layers(), cfg, "cl", s_th=0.4)
+    assert big > 0.0
+
+
+def test_io_linear_in_s_th():
+    """Fig. 13: extra IO grows with S_TH and crosses ~10% near S_TH=0.1."""
+    cfg = P.DlaConfig(array_dim=32, dot_size=52, data_reuse=True)
+    ratios = [P.io_bytes(layers(), cfg, "cl", s_th=s)["extra_over_weights"]
+              for s in (0.02, 0.05, 0.1, 0.2)]
+    assert ratios == sorted(ratios)
+    assert ratios[2] > 0.05  # near or above 10% at s_th=0.1
+
+
+def test_data_reuse_reduces_io():
+    cfg_r = P.DlaConfig(array_dim=32, dot_size=52, data_reuse=True)
+    cfg_n = P.DlaConfig(array_dim=32, dot_size=52, data_reuse=False)
+    r = P.io_bytes(layers(), cfg_r, "cl", s_th=0.1)["extra_over_weights"]
+    n = P.io_bytes(layers(), cfg_n, "cl", s_th=0.1)["extra_over_weights"]
+    assert r < n

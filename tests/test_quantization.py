@@ -1,0 +1,66 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+
+
+def test_quantize_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    q, s = Q.quantize(x)
+    err = jnp.abs(Q.dequantize(q, s) - x).max()
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_saturate_clips_to_24bit():
+    acc = jnp.array([1 << 25, -(1 << 25), 100])
+    out = Q.saturate(acc)
+    assert int(out[0]) == (1 << 23) - 1
+    assert int(out[1]) == -(1 << 23)
+    assert int(out[2]) == 100
+
+
+def test_trunc_lsb_respects_q_scale():
+    for q_scale in (0, 3, 7, 12):
+        t = Q.choose_trunc_lsb(jnp.asarray(1000.0), q_scale=q_scale)
+        assert int(t) >= q_scale
+        assert int(t) <= Q.ACC_BITS - Q.OUT_BITS
+
+
+def test_truncate_acc_window():
+    acc = jnp.asarray([0b101100100])  # 356
+    out = Q.truncate_acc(acc, 2)
+    assert int(out[0]) == (356 + 2) >> 2
+
+
+def test_fake_quant_linear_accuracy():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 48))
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 16))
+    y, aux = Q.fake_quant_linear(x, w)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.05
+    assert int(aux["t"]) >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(q_scale=st.integers(0, 12), seed=st.integers(0, 2 ** 16))
+def test_qmatmul_monotone_quant_error(q_scale, seed):
+    """Constrained quantization never produces invalid windows and the
+    paper's premise holds: small Q_scale keeps error negligible."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 32))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (32, 8))
+    xq, _ = Q.quantize(x)
+    wq, _ = Q.quantize(w)
+    yq, t = Q.qmatmul(xq, wq, q_scale=q_scale)
+    assert int(t) >= q_scale
+    assert int(jnp.abs(yq).max()) <= 127
+
+
+def test_quant_error_grows_with_extreme_q_scale():
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+    lo = float(Q.quant_error(x, 0))
+    hi = float(Q.quant_error(x, 14))
+    assert hi >= lo  # Fig. 11: accuracy degrades only at large Q_scale

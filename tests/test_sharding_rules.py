@@ -1,0 +1,78 @@
+"""Sharding-rule unit tests on the abstract production mesh (no devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.tree_util import DictKey
+
+from repro.parallel import sharding as S
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def spec_of(names, shape, mesh=MESH):
+    path = tuple(DictKey(n) for n in names)
+    leaf = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+    return S.param_spec(path, leaf, mesh)
+
+
+def test_in_proj_2d_sharded():
+    assert spec_of(("seg0", "s0", "attn", "wq"), (23, 4608, 4096)) == \
+        P(None, ("data",), "model")
+
+
+def test_out_proj_transposed():
+    assert spec_of(("seg0", "s0", "attn", "wo"), (23, 4096, 4608)) == \
+        P(None, "model", ("data",))
+
+
+def test_multipod_fsdp_axes():
+    s = spec_of(("seg0", "s0", "ffn", "wi"), (23, 4608, 36864), MESH_MP)
+    assert s == P(None, ("pod", "data"), "model")
+
+
+def test_moe_experts_over_model():
+    s = spec_of(("seg0", "s0", "ffn", "wi"), (94, 128, 4096, 1536))
+    assert s == P(None, "model", ("data",), None)
+
+
+def test_indivisible_dims_replicated():
+    # seamless vocab 256206 doesn't divide 16 => replicated on that dim
+    s = spec_of(("embed",), (256206, 1024))
+    assert s == P(None, ("data",))
+
+
+def test_norms_replicated():
+    assert spec_of(("seg0", "s0", "ln1"), (23, 4608)) == P(None, None)
+
+
+def test_unstacked_tail_params():
+    assert spec_of(("final_norm",), (4608,)) == P(None)
+
+
+def sds(shape):
+    # ShapeDtypeStructs, NOT real arrays — these are full-scale cache shapes
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def test_serving_layout_drops_fsdp():
+    tree = {"seg0": {"s0": {"attn": {"wq": sds((2, 64, 64))}}}}
+    sh = S.param_shardings(tree, MESH, no_fsdp=True)
+    spec = jax.tree.leaves(sh)[0].spec
+    assert spec == P(None, None, "model")
+
+
+def test_cache_split_k_when_heads_indivisible():
+    # glm4: kv=2 heads can't shard 16 ways => cache length sharded instead
+    cache = {"seg0": {"s0": {"attn": {"k": sds((40, 128, 32768, 2, 128))}}}}
+    sh = S.cache_shardings(cache, MESH)
+    spec = jax.tree.leaves(sh)[0].spec
+    assert spec == P(None, ("data",), "model", None, None)
+
+
+def test_cache_heads_preferred_when_divisible():
+    cache = {"seg0": {"s0": {"attn": {"k": sds((23, 128, 32768, 16, 128))}}}}
+    sh = S.cache_shardings(cache, MESH)
+    spec = jax.tree.leaves(sh)[0].spec
+    assert spec == P(None, ("data",), None, "model", None)

@@ -1,0 +1,68 @@
+"""End-to-end behaviour tests: the full cross-layer optimization pipeline
+(paper Fig. 1) from sensitivity analysis through Bayesian DSE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bayesopt as B
+from repro.core import perfmodel as P
+from repro.core.evaluate import trained_cnn
+from repro.core.pipeline import optimize
+from repro.core.strategies import make_strategies
+from repro.core.flexhyca import FTConfig
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    return trained_cnn("vgg", steps=200)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return P.lm_layer_gemms(4, 128, 512, 4, 32, 4, seq=256)
+
+
+def test_full_crosslayer_pipeline(oracle, workload):
+    """Run the complete DSE for fault-rate-I-style constraints and check the
+    selected design dominates blanket TMR on area at equal feasibility."""
+    clean = oracle.accuracy(None)
+    ber = 1e-3
+    cons = B.Constraints(acc_min=0.97 * clean, perf_max=0.10, bw_max=0.10)
+
+    space = [
+        B.Param("s_th", (0.05, 0.1, 0.2), monotone=+1),
+        B.Param("ib_th", (2, 3, 4), monotone=+1),
+        B.Param("nb_th", (1, 2, 3), monotone=+1),
+        B.Param("q_scale", (4, 7), monotone=0),
+        B.Param("s_policy", ("uniform",), monotone=0),
+        B.Param("dot_size", (16, 52), monotone=0),
+        B.Param("data_reuse", (True,), monotone=0),
+        B.Param("pe_policy", ("configurable", "direct"), monotone=0),
+    ]
+    res = optimize(lambda ft: oracle.accuracy(ft), workload, cons, ber,
+                   iter_max_step=14, seed=0, space=space)
+    assert res.ft is not None, "DSE found no feasible design"
+    # paper Fig. 9: cross-layer design is far below full TMR (200%)
+    assert res.area_overhead < 2.0
+    # and the chosen design really meets the accuracy bar
+    acc = oracle.accuracy(res.ft)
+    assert acc >= 0.97 * clean - 0.03
+
+
+def test_strategy_comparison_matches_paper(oracle, workload):
+    """Fig. 7/8/9 qualitative relations on the reduced benchmark."""
+    strategies = make_strategies()
+    ber = 1e-3
+    area = {k: s.area_relative() for k, s in strategies.items()}
+    perf = {k: s.perf_loss(workload) for k, s in strategies.items()}
+    # area: crt3 > crt2 > crt1 > arch >= alg == base
+    assert area["crt3"] > area["crt2"] > area["crt1"] > area["arch"]
+    assert area["alg"] == 1.0 and area["base"] == 1.0
+    # perf: alg/arch suffer heavily, cl and crt do not
+    assert perf["alg"] > 0.5 and perf["arch"] > 0.5
+    assert perf["cl"] < 0.05 and perf["crt1"] == 0.0
+    # accuracy: any protection beats none at this BER
+    acc_base = oracle.accuracy(FTConfig(ber=ber, strategy="base"))
+    acc_crt3 = oracle.accuracy(FTConfig(ber=ber, strategy="crt3"))
+    assert acc_crt3 > acc_base
