@@ -17,9 +17,9 @@ from repro.core import bayesopt as B
 from repro.core import perfmodel as P
 from repro.core import quantization as Q
 from repro.core.evaluate import trained_cnn
-from repro.core.flexhyca import FTConfig
 from repro.core.pipeline import optimize
 from repro.core.strategies import make_strategies
+from repro.ft import get_policy
 
 BER_I = 1e-3     # reduced-model operating point for the paper's fault I
 BER_II = 2e-3    # ... and fault II
@@ -54,9 +54,10 @@ def fig6_cumulative_protection():
 
 
 def _dse_config(ber):
-    """Small-space DSE for the TMR-CL row (Table II analogue)."""
-    return FTConfig(ber=ber, s_th=0.05, ib_th=2 if ber == BER_I else 3,
-                    nb_th=1, q_scale=7, dot_size=52, strategy="cl")
+    """Small-space DSE optimum for the TMR-CL row (Table II analogue)."""
+    return get_policy("cl", ber=ber, s_th=0.05,
+                      ib_th=2 if ber == BER_I else 3,
+                      nb_th=1, q_scale=7, dot_size=52)
 
 
 def fig7_strategy_accuracy():
@@ -111,9 +112,9 @@ def fig10_neuron_bits():
     for s_th in (0.02, 0.05, 0.1, 0.25, 0.4):
         jax.clear_caches()  # each (s_th, ib, nb) is a distinct jit cache entry
         for ib, nb in combos:
-            ft = FTConfig(ber=BER_II, strategy="cl", s_th=s_th, ib_th=ib,
-                          nb_th=nb, q_scale=7)
-            acc = o.accuracy(ft)
+            pol = get_policy("cl", ber=BER_II, s_th=s_th, ib_th=ib,
+                             nb_th=nb, q_scale=7)
+            acc = o.accuracy(pol)
             rows.append(dict(s_th=s_th, ib=ib, nb=nb, acc=round(acc, 4)))
     lo = np.mean([r["acc"] for r in rows if r["nb"] == 1])
     hi = np.mean([r["acc"] for r in rows if r["nb"] == 3])
@@ -126,9 +127,8 @@ def fig11_qscale():
     x = jax.random.normal(jax.random.PRNGKey(0), (256, 64))
     for qs in range(0, 15, 2):
         qe = float(Q.quant_error(x, qs))
-        ft = FTConfig(ber=0.0, strategy="cl", q_scale=qs)
         acc = o.accuracy(None) if qs == 0 else o.accuracy(
-            FTConfig(ber=1e-9, strategy="cl", q_scale=qs))
+            get_policy("cl", ber=1e-9, q_scale=qs))
         rows.append(dict(q_scale=qs, quant_rel_err=round(qe, 5),
                          acc=round(acc, 4)))
     return rows, rows[4]["acc"] - rows[0]["acc"]  # drop at q_scale=8

@@ -25,23 +25,24 @@ def main():
     clean = oracle.accuracy(None)
     print(f"clean accuracy: {clean:.3f}")
 
-    from benchmarks.workloads import vgg16_gemms
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.workloads import vgg16_gemms
     cons = B.Constraints(acc_min=0.97 * clean, perf_max=0.10, bw_max=0.10)
     print(f"constraints: acc >= {cons.acc_min:.3f}, perf/bw loss <= 10%")
 
-    res = optimize(lambda ft: oracle.accuracy(ft), vgg16_gemms(), cons,
+    res = optimize(lambda pol: oracle.accuracy(pol), vgg16_gemms(), cons,
                    args.ber, iter_max_step=args.iters, seed=0)
-    if res.ft is None:
+    if res.policy is None:
         print("no feasible design found — raise --iters")
         return
+    pol = res.policy
     print("\noptimized cross-layer design (cf. paper Table II):")
-    for k in ("s_th", "ib_th", "nb_th", "q_scale", "s_policy", "dot_size",
-              "data_reuse", "pe_policy"):
-        print(f"  {k:12s} = {getattr(res.ft, k)}")
+    for layer in (pol.algorithm, pol.arch, pol.circuit):
+        for f, v in vars(layer).items():
+            print(f"  {f:16s} = {v}")
     print(f"  area overhead = {res.area_overhead*100:.1f}% "
           f"(evaluations: {res.dse.evaluations}, pruned: {res.dse.pruned})")
-    print(f"  accuracy under fault: {oracle.accuracy(res.ft):.3f}")
+    print(f"  accuracy under fault: {oracle.accuracy(pol):.3f}")
 
 
 if __name__ == "__main__":

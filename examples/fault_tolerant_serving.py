@@ -1,7 +1,11 @@
-"""Serve a small LM with batched requests while the substrate injects soft
-errors — and watch selective protection keep generations stable.
+"""Serve a small LM while the substrate injects soft errors — and watch a
+``repro.ft`` protection policy keep generations stable.
 
   PYTHONPATH=src python examples/fault_tolerant_serving.py
+
+The serving engine takes a protection policy directly: every projection of
+prefill and decode then computes through the faulty quantized DLA path with
+that policy's cross-layer protection applied.
 """
 import os
 import sys
@@ -9,13 +13,11 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import ft
 from repro.configs import get_config
 from repro.models import build
-from repro.models.common import FTCtx
-from repro.core.flexhyca import FTConfig
 from repro.serve.engine import Engine, ServeConfig
 
 
@@ -23,40 +25,29 @@ def main():
     cfg = get_config("h2o-danube-1.8b", reduced=True)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, cfg=ServeConfig(max_new_tokens=16))
+    serve_cfg = ServeConfig(max_new_tokens=8)
+    engine = Engine(model, params, cfg=serve_cfg)
 
-    prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 12),
+    prompts = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 12),
                                             0, cfg.vocab)}
     clean = engine.generate(prompts)
     print("clean generations:\n", np.asarray(clean))
 
-    # Emulate decode on a faulty substrate by perturbing the weights with the
-    # DLA fault model (weight SRAM upsets), then serve base vs protected.
-    from repro.core import faults, quantization as Q
+    # Same engine, same weights, but the DLA substrate now flips bits at BER:
+    # compare the unprotected design against circuit-level TMR of the top-3
+    # output bits (both straight from the policy registry).
+    ber = 2e-3
+    for name in ("base", "crt3"):
+        policy = ft.get_policy(name, ber=ber, weight_faults=False)
+        faulty = Engine(model, params, cfg=serve_cfg, policy=policy)
+        gen = faulty.generate(prompts)
+        agree = float(np.mean(np.asarray(gen) == np.asarray(clean)))
+        print(f"BER {ber:g} under {name!r}: "
+              f"token agreement with clean = {agree:.2f}")
 
-    def corrupt(params, ber, key):
-        flat, td = jax.tree_util.tree_flatten(params)
-        out = []
-        for i, leaf in enumerate(flat):
-            if leaf.ndim >= 2:
-                q, s = Q.quantize(leaf.astype(jnp.float32))
-                qf = faults.inject_weight_faults(
-                    jax.random.fold_in(key, i), q, ber)
-                out.append((qf.astype(jnp.float32) * s).astype(leaf.dtype))
-            else:
-                out.append(leaf)
-        return jax.tree_util.tree_unflatten(td, out)
-
-    for ber in (1e-5, 1e-4):
-        bad = Engine(model, corrupt(params, ber, jax.random.PRNGKey(9)),
-                     cfg=ServeConfig(max_new_tokens=16))
-        gen = bad.generate(prompts)
-        agree = float(jnp.mean(gen == clean))
-        print(f"BER {ber:g}: token agreement with clean = {agree:.2f}")
-
-    print("\n(with the paper's protection the high bits of every weight are "
-          "TMR'd in the PE array; see tests/test_flexhyca.py and the "
-          "protected_mm kernel for the per-matmul path)")
+    print("\n(the cross-layer 'cl' policy additionally recomputes "
+          "important channels on the DPPU — feed Algorithm-1 masks through "
+          "FTCtx(masks=...); see examples/crosslayer_dse.py)")
 
 
 if __name__ == "__main__":

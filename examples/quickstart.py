@@ -1,12 +1,20 @@
-"""Quickstart: the paper's cross-layer fault-tolerance stack in 60 seconds.
+"""Quickstart: the paper's cross-layer fault-tolerance stack in 60 seconds,
+through the unified ``repro.ft`` protection-policy API.
 
   PYTHONPATH=src python examples/quickstart.py
 
 1. computes a linear layer through the bit-exact DLA datapath,
-2. injects soft errors at BER 1e-2 and watches accuracy collapse,
-3. turns on the paper's selective protection (important neurons via
-   Algorithm 1 + high-bit TMR + Q_scale constraint) and watches it recover,
-4. prices the protection with the circuit-level area model.
+2. injects soft errors at BER 1e-2 and watches accuracy collapse
+   (``ft.get_policy("base")`` — the unprotected design),
+3. turns on the paper's cross-layer policy (``ft.get_policy("cl")``:
+   important neurons via Algorithm 1 + high-bit TMR + Q_scale constraint)
+   and watches it recover,
+4. sweeps the BER axis with one vmapped executable — policies are pytrees
+   whose only dynamic leaf is ``ber``, so no re-jit per operating point,
+5. prices the protection with the circuit-level area model.
+
+Backends: the same call runs the fused Pallas TPU kernel with
+``backend="pallas"`` (see ``repro.kernels.protected_mm``).
 """
 import os
 import sys
@@ -16,8 +24,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
+from repro import ft
 from repro.core import area
-from repro.core.flexhyca import FTConfig, clean_linear, ft_linear
+from repro.core.flexhyca import clean_linear
 
 key = jax.random.PRNGKey(0)
 x = jax.random.normal(key, (128, 256))
@@ -34,8 +43,8 @@ BER = 1e-2
 print(f"substrate BER = {BER} (compute-array soft errors; weight SRAM has ECC)")
 
 # --- unprotected DLA -------------------------------------------------------
-y_base = ft_linear(key, x, w, FTConfig(ber=BER, strategy="base",
-                                       weight_faults=False))
+base = ft.get_policy("base", ber=BER, weight_faults=False)
+y_base = ft.protect_linear(key, x, w, base)
 print(f"unprotected      rel-RMS error: {rel_rms(y_base):.4f}")
 
 # --- the paper's cross-layer protection ------------------------------------
@@ -45,15 +54,23 @@ importance = jnp.abs(w).sum(0)
 thresh = jnp.percentile(importance, 90)
 important = importance >= thresh
 
-ft = FTConfig(ber=BER, strategy="cl", s_th=0.1, ib_th=4, nb_th=2, q_scale=7,
-              pe_policy="configurable", dot_size=52, weight_faults=False)
-y_cl = ft_linear(key, x, w, ft, important=important)
+cl = ft.get_policy("cl", ber=BER, s_th=0.1, ib_th=4, nb_th=2, q_scale=7,
+                   weight_faults=False)
+y_cl = ft.protect_linear(key, x, w, cl, important=important)
 print(f"TMR-CL protected rel-RMS error: {rel_rms(y_cl):.4f}")
 
+# --- sweep the BER axis with one compiled executable -----------------------
+bers = jnp.array([1e-4, 1e-3, 1e-2, 5e-2], jnp.float32)
+sweep = jax.vmap(lambda p: ft.protect_linear(key, x, w, p,
+                                             important=important))
+ys = sweep(cl.with_ber(bers))
+errs = ", ".join(f"{float(b):g}: {rel_rms(y):.4f}" for b, y in zip(bers, ys))
+print(f"vmapped BER sweep (TMR-CL) — {errs}")
+
 # --- what does it cost in silicon? ------------------------------------------
-r = area.array_area(32, nb_th=ft.nb_th, q_scale=ft.q_scale,
-                    pe_policy=ft.pe_policy, dot_size=ft.dot_size,
-                    ib_th=ft.ib_th)
+r = area.array_area(32, nb_th=cl.circuit.nb_th, q_scale=cl.algorithm.q_scale,
+                    pe_policy=cl.circuit.pe_policy,
+                    dot_size=cl.arch.dot_size, ib_th=cl.circuit.ib_th)
 full_tmr = area.full_tmr_pe_cost() / area.pe_cost()
 print(f"area overhead: {r['overhead'] * 100:.1f}% of the 2-D array "
       f"(classic TMR: {100 * (full_tmr - 1):.0f}%)")

@@ -2,9 +2,13 @@
 
 Layers:
   algorithm    — importance (Alg.1), bit_importance (Alg.2), quantization
-  architecture — flexhyca (FlexHyCA dual-path linear), perfmodel
+  architecture — perfmodel (+ the DPPU recompute semantics in repro.ft)
   circuit      — faults (BER injection + TMR semantics), area (bit-TMR cost)
   cross-layer  — bayesopt (Alg.3), strategies, pipeline (Fig.1 driver)
+
+The public fault-tolerance API lives in :mod:`repro.ft` (policy registry +
+``protect_linear``); ``FTConfig``/``ft_linear`` remain as a compatibility
+surface.
 """
 from repro.core.flexhyca import FTConfig, ft_linear, clean_linear  # noqa: F401
 from repro.core.bayesopt import Constraints, bayes_design_opt, table1_space  # noqa: F401

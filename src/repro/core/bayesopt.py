@@ -32,7 +32,7 @@ def table1_space() -> list[Param]:
         Param("ib_th", (2, 3, 4), monotone=+1),
         Param("nb_th", (1, 2, 3), monotone=+1),
         Param("q_scale", tuple(range(1, 17)), monotone=0),
-        Param("s_policy", ("layers", "uniform"), monotone=0),
+        Param("s_policy", ("uniform", "global"), monotone=0),
         Param("dot_size", (8, 16, 32, 52, 64, 128, 256), monotone=0),
         Param("data_reuse", (True, False), monotone=0),
         Param("pe_policy", ("direct", "configurable"), monotone=0),

@@ -12,8 +12,8 @@ from functools import lru_cache
 import jax
 import jax.numpy as jnp
 
-from repro.core.flexhyca import FTConfig
 from repro.core.importance import ImportanceResult, neuron_importance
+from repro.ft import ProtectionPolicy, as_policy, get_policy
 from repro.data.pipeline import vision_batch
 from repro.models.cnn import CNNConfig, accuracy, apply_cnn, xent_loss
 from repro.models.common import FTCtx
@@ -55,16 +55,19 @@ class CnnOracle:
         return self.importance().select(s_th, policy)
 
     # ---- accuracy under fault ------------------------------------------
-    def accuracy(self, ft: FTConfig | None, masks=None,
+    def accuracy(self, ft: ProtectionPolicy | None, masks=None,
                  protected_layers=None, seed: int = 0) -> float:
-        if ft is None or ft.ber == 0:
+        """`ft`: a ProtectionPolicy, a registered policy name, a legacy
+        FTConfig, or None for the clean model."""
+        pol = as_policy(ft)
+        if pol is None or pol.ber == 0:
             logits = apply_cnn(self.params, self.cfg, self._imgs)
             return float(accuracy(logits, self._labels))
         accs = []
-        if masks is None and ft.strategy == "cl":
-            masks = self.masks(ft.s_th, ft.s_policy)
+        if masks is None and pol.uses_importance:
+            masks = self.masks(pol.algorithm.s_th, pol.algorithm.s_policy)
         for r in range(self.n_rep):
-            ftc = FTCtx(ft, jax.random.PRNGKey(seed * 97 + r), masks,
+            ftc = FTCtx(pol, jax.random.PRNGKey(seed * 97 + r), masks,
                         protected_layers)
             logits = apply_cnn(self.params, self.cfg, self._imgs, ftc=ftc)
             accs.append(float(accuracy(logits, self._labels)))
@@ -80,7 +83,7 @@ class CnnOracle:
         key = (ber, seed)
         if key in self._sens_cache:
             return self._sens_cache[key]
-        base_ft = FTConfig(ber=ber, strategy="arch")
+        base_ft = get_policy("arch", ber=ber)
         none = self.accuracy(base_ft, protected_layers=set(), seed=seed)
         out = {}
         for name in self.layer_names():
@@ -93,7 +96,7 @@ class CnnOracle:
     def cumulative_protection(self, ber: float, seed: int = 0):
         sens = self.layer_sensitivity(ber, seed)
         order = sorted(sens, key=sens.get, reverse=True)
-        ft = FTConfig(ber=ber, strategy="arch")
+        ft = get_policy("arch", ber=ber)
         curve = [("none", self.accuracy(ft, protected_layers=set(),
                                         seed=seed))]
         prot: set = set()

@@ -34,7 +34,12 @@ def flip_bits(key: jax.Array, x: jax.Array, ber: float, bits: int,
         under TMR protection — those flip at the residual rate instead.
     Returns int32 array, re-signed to `bits` wide.
     """
-    ber = float(ber)
+    # `ber` may be a traced value (policy pytrees put it on a vmap/scan axis);
+    # the bernoulli draws are identical either way, so static configs stay
+    # bit-exact while traced ones share one compiled executable.
+    static_ber = not isinstance(ber, jax.core.Tracer)
+    if static_ber:
+        ber = float(ber)
     x = x.astype(jnp.int32)
     mask_all = (1 << bits) - 1
     ux = x & mask_all
@@ -46,7 +51,10 @@ def flip_bits(key: jax.Array, x: jax.Array, ber: float, bits: int,
         bitval = 1 << b
         is_prot = (prot & bitval) != 0
         f_raw = _flip_plane(keys[2 * b], ux.shape, ber)
-        f_res = _flip_plane(keys[2 * b + 1], ux.shape, r) if r > 0 else jnp.zeros(ux.shape, bool)
+        if static_ber and r == 0:
+            f_res = jnp.zeros(ux.shape, bool)
+        else:
+            f_res = _flip_plane(keys[2 * b + 1], ux.shape, r)
         f = jnp.where(is_prot, f_res, f_raw)
         flips = flips | jnp.where(f, bitval, 0)
     ux = ux ^ flips

@@ -1,34 +1,31 @@
-"""FlexHyCA — functional model of the heterogeneous fault-tolerant DLA.
+"""FlexHyCA — legacy entry point of the heterogeneous fault-tolerant DLA.
 
-``ft_linear`` is the drop-in linear layer with the paper's full protection
-stack.  It computes through the quantized DLA datapath
-(``repro.core.quantization``), injects soft errors at a given BER
-(``repro.core.faults``), and applies the selective protections:
+The protection math now lives in :mod:`repro.ft` (``repro.ft.protect_linear``
+with the policy registry); this module keeps the original surface alive:
 
-  * circuit layer — top-``nb_th`` bits of ordinary neurons TMR'd in the 2-D
-    array; top-``ib_th`` bits of important neurons TMR'd in the DPPU,
-  * architecture layer — important neurons are *recomputed* on the DPPU and
-    the DPPU result replaces the 2-D array result (recompute-and-select),
-  * algorithm layer — the important-neuron mask comes from Algorithm 1 and the
-    quantization is Q_scale-constrained.
-
-The Pallas kernel ``repro.kernels.protected_mm`` implements the same
-computation tiled for TPU VMEM; its ``ref.py`` oracle must match this module.
+  * :class:`FTConfig` — the flat Table-I design vector, still used to encode
+    experiment configs; convert with ``repro.ft.from_ftconfig``.
+  * :func:`ft_linear` — deprecation shim over ``repro.ft.protect_linear``
+    (reference backend, bit-exact with the historical implementation).
+  * :func:`clean_linear` — fault-free quantized reference.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import faults, quantization as Q
+from repro.core import quantization as Q
 
 
 @dataclasses.dataclass(frozen=True)
 class FTConfig:
-    """Cross-layer fault-tolerance configuration (paper Table I vector V)."""
+    """Cross-layer fault-tolerance configuration (paper Table I vector V).
+
+    ``strategy`` names a design in the ``repro.ft`` policy registry; the
+    seven paper designs are ``base | crt1 | crt2 | crt3 | arch | alg | cl``.
+    """
     ber: float = 0.0          # bit error rate of the substrate
     s_th: float = 0.05        # fraction of important neurons
     ib_th: int = 2            # protected high bits of important neurons (DPPU)
@@ -38,80 +35,24 @@ class FTConfig:
     dot_size: int = 52
     data_reuse: bool = True
     pe_policy: str = "configurable"
-    strategy: str = "cl"      # base | crt1 | crt2 | crt3 | arch | alg | cl
+    strategy: str = "cl"
     weight_faults: bool = True
     seed: int = 0
 
 
-def _strategy_protect(cfg: FTConfig, important: jax.Array | None, n: int):
-    """Per-output-channel number of protected high bits + whether the layer is
-    TMR'd as a whole (arch/alg spatial/temporal redundancy)."""
-    if cfg.strategy == "base":
-        return jnp.zeros((n,), jnp.int32), False
-    if cfg.strategy.startswith("crt"):
-        k = int(cfg.strategy[3:])
-        return jnp.full((n,), k, jnp.int32), False
-    if cfg.strategy in ("arch", "alg"):
-        # whole-layer TMR when the layer is in the protected set; bit field 0
-        return jnp.zeros((n,), jnp.int32), True
-    if cfg.strategy == "cl":
-        imp = jnp.zeros((n,), bool) if important is None else important
-        return jnp.where(imp, cfg.ib_th, cfg.nb_th).astype(jnp.int32), False
-    raise ValueError(cfg.strategy)
-
-
-@partial(jax.jit, static_argnames=("cfg", "layer_protected"))
 def ft_linear(key: jax.Array, x: jax.Array, w: jax.Array, cfg: FTConfig,
               important: jax.Array | None = None,
               layer_protected: bool = True) -> jax.Array:
-    """Fault-tolerant linear: float in/out, faulty quantized DLA inside.
-
-    Args:
-      x: (..., K) activations.  w: (K, N) weights.
-      important: (N,) bool mask of important output channels (Algorithm 1).
-      layer_protected: for arch/alg strategies — whether this layer is in the
-        protected (sensitive) set.
-    Returns (..., N) float32.
-    """
-    orig_shape = x.shape
-    x2 = x.reshape(-1, orig_shape[-1])
-    kw, ka, kd = jax.random.split(key, 3)
-
-    q_scale = cfg.q_scale if cfg.strategy == "cl" else 0
-    xq, sx = Q.quantize(x2)
-    wq, sw = Q.quantize(w)
-    if cfg.ber > 0 and cfg.weight_faults:
-        wq_f = faults.inject_weight_faults(kw, wq, cfg.ber)
-    else:
-        wq_f = wq
-    acc = Q.saturate(jnp.matmul(xq, wq_f, preferred_element_type=jnp.int32))
-    t = Q.choose_trunc_lsb(jnp.max(jnp.abs(acc)), q_scale=q_scale)
-    yq = Q.truncate_acc(acc, t)
-
-    protect, whole_layer_tmr = _strategy_protect(cfg, important, w.shape[1])
-    if cfg.ber > 0:
-        if whole_layer_tmr and layer_protected:
-            # spatial/temporal TMR of the whole layer: every bit voted
-            yq_f = faults.inject_output_faults(
-                ka, yq, cfg.ber, protect_top=jnp.full((w.shape[1],), 8, jnp.int32))
-        else:
-            yq_f = faults.inject_output_faults(ka, yq, cfg.ber, protect_top=protect)
-    else:
-        yq_f = yq
-
-    if cfg.strategy == "cl" and cfg.ber > 0 and important is not None:
-        # architecture layer: DPPU recomputes important channels on its own
-        # (clean weight SRAM + IB_TH-bit-protected MACs) and overrides.
-        acc_d = Q.saturate(jnp.matmul(xq, wq, preferred_element_type=jnp.int32))
-        yq_d = Q.truncate_acc(acc_d, t)
-        yq_d = faults.inject_output_faults(
-            kd, yq_d, cfg.ber,
-            protect_top=jnp.full((w.shape[1],), cfg.ib_th, jnp.int32))
-        yq_f = jnp.where(important[None, :], yq_d, yq_f)
-
-    scale = sx * sw * (2.0 ** t.astype(jnp.float32))
-    y = yq_f.astype(jnp.float32) * scale
-    return y.reshape(*orig_shape[:-1], w.shape[1])
+    """Deprecated shim: use ``repro.ft.protect_linear`` with a registry
+    policy.  Behavior is bit-identical to the historical implementation."""
+    from repro import ft
+    warnings.warn(
+        "repro.core.flexhyca.ft_linear is deprecated; use "
+        "repro.ft.protect_linear(key, x, w, ft.get_policy(name, ...))",
+        DeprecationWarning, stacklevel=2)
+    return ft.protect_linear(key, x, w, ft.from_ftconfig(cfg),
+                             important=important,
+                             layer_protected=layer_protected)
 
 
 def clean_linear(x: jax.Array, w: jax.Array, q_scale: int = 0) -> jax.Array:

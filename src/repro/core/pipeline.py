@@ -5,8 +5,9 @@ area/perf/IO oracles + Algorithm 3 (Bayesian DSE) into one call:
 
     result = optimize(model_eval, workload, constraints, fault_rate)
 
-``model_eval`` is an accuracy oracle: FTConfig -> accuracy-under-fault.  It is
-supplied by the benchmark harness (CNN or LM evaluation with ``ft_linear``).
+``model_eval`` is an accuracy oracle: ProtectionPolicy -> accuracy-under-
+fault.  It is supplied by the benchmark harness (CNN or LM evaluation with
+``repro.ft.protect_linear``).
 """
 from __future__ import annotations
 
@@ -16,25 +17,26 @@ from typing import Callable, Sequence
 from repro.core import area as A
 from repro.core import bayesopt as B
 from repro.core import perfmodel as P
-from repro.core.flexhyca import FTConfig
+from repro.ft import ProtectionPolicy, get_policy
 
 
 @dataclasses.dataclass
 class CrossLayerResult:
-    ft: FTConfig | None
+    policy: ProtectionPolicy | None
     dse: B.DseResult
     area_overhead: float | None
 
-
-def _ft_from_cfg(cfg: dict, ber: float) -> FTConfig:
-    return FTConfig(ber=ber, s_th=cfg["s_th"], ib_th=cfg["ib_th"],
-                    nb_th=cfg["nb_th"], q_scale=cfg["q_scale"],
-                    s_policy=cfg["s_policy"], dot_size=cfg["dot_size"],
-                    data_reuse=cfg["data_reuse"], pe_policy=cfg["pe_policy"],
-                    strategy="cl")
+    @property
+    def ft(self) -> ProtectionPolicy | None:  # legacy field name
+        return self.policy
 
 
-def optimize(acc_oracle: Callable[[FTConfig], float],
+def _policy_from_cfg(cfg: dict, ber: float) -> ProtectionPolicy:
+    """One DSE point (a Table-I assignment dict) as a cross-layer policy."""
+    return get_policy("cl", ber=ber, **cfg)
+
+
+def optimize(acc_oracle: Callable[[ProtectionPolicy], float],
              layers: Sequence[P.Gemm],
              constraints: B.Constraints,
              ber: float,
@@ -46,19 +48,22 @@ def optimize(acc_oracle: Callable[[FTConfig], float],
     space = space or B.table1_space()
 
     def evaluate(cfg: dict) -> B.EvalResult:
-        ft = _ft_from_cfg(cfg, ber)
-        acc = acc_oracle(ft)
-        area = A.array_area(array_dim, ft.nb_th, ft.q_scale, ft.pe_policy,
-                            dot_size=ft.dot_size, ib_th=ft.ib_th)["overhead"]
-        dla = P.DlaConfig(array_dim=array_dim, dot_size=ft.dot_size,
-                          data_reuse=ft.data_reuse)
-        perf = P.perf_loss(layers, dla, "cl", s_th=ft.s_th)
-        bw = P.io_bytes(layers, dla, "cl", s_th=ft.s_th)["extra_over_weights"]
+        policy = _policy_from_cfg(cfg, ber)
+        alg, arch, circ = policy.algorithm, policy.arch, policy.circuit
+        acc = acc_oracle(policy)
+        area = A.array_area(array_dim, circ.nb_th, alg.q_scale, circ.pe_policy,
+                            dot_size=arch.dot_size,
+                            ib_th=circ.ib_th)["overhead"]
+        dla = P.DlaConfig(array_dim=array_dim, dot_size=arch.dot_size,
+                          data_reuse=arch.data_reuse)
+        perf = P.perf_loss(layers, dla, policy.perf_kind, s_th=alg.s_th)
+        bw = P.io_bytes(layers, dla, policy.perf_kind,
+                        s_th=alg.s_th)["extra_over_weights"]
         return B.EvalResult(area=area, acc=acc, perf_loss=perf, bw_loss=bw)
 
     dse = B.bayes_design_opt(space, evaluate, constraints,
                              iter_max_step=iter_max_step, seed=seed)
-    ft = _ft_from_cfg(dse.best, ber) if dse.best else None
+    policy = _policy_from_cfg(dse.best, ber) if dse.best else None
     return CrossLayerResult(
-        ft=ft, dse=dse,
+        policy=policy, dse=dse,
         area_overhead=dse.best_eval.area if dse.best_eval else None)

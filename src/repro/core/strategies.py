@@ -1,9 +1,11 @@
 """The paper's comparison set of fault-tolerant DLA designs.
 
-Base, TMR-CRT{1,2,3}, TMR-ARCH, TMR-ALG, TMR-CL — each exposing the three
-evaluation axes of Section IV: accuracy-under-fault (via ``ft_linear``
-configs), execution time (via ``perfmodel``) and redundant chip area (via
-``area``).
+Base, TMR-CRT{1,2,3}, TMR-ARCH, TMR-ALG, TMR-CL — each a
+:class:`repro.ft.ProtectionPolicy` from the policy registry, exposing the
+three evaluation axes of Section IV: accuracy-under-fault (via
+``ft.protect_linear``), execution time (via ``perfmodel``) and redundant chip
+area (via ``area``).  All per-design behavior is derived from the policy's
+layer structure; there are no name->behavior tables here.
 """
 from __future__ import annotations
 
@@ -12,66 +14,64 @@ from typing import Sequence
 
 from repro.core import area as A
 from repro.core import perfmodel as P
-from repro.core.flexhyca import FTConfig
+from repro.ft import ProtectionPolicy, as_policy, paper_policies
 
 
 @dataclasses.dataclass(frozen=True)
 class Strategy:
     name: str
-    ft: FTConfig
+    policy: ProtectionPolicy
 
-    def with_ber(self, ber: float) -> FTConfig:
-        return dataclasses.replace(self.ft, ber=ber)
+    @property
+    def ft(self) -> ProtectionPolicy:  # legacy field name
+        return self.policy
+
+    def with_ber(self, ber: float) -> ProtectionPolicy:
+        return self.policy.with_ber(ber)
+
+    def _dla(self, array_dim: int) -> P.DlaConfig:
+        arch = self.policy.arch
+        return P.DlaConfig(array_dim=array_dim, dot_size=arch.dot_size,
+                           data_reuse=arch.data_reuse)
 
     # ---- area -----------------------------------------------------------
     def area_relative(self, array_dim: int = 32) -> float:
         """Computing-array area relative to the unprotected base array."""
-        ft = self.ft
-        if self.name == "base":
+        p = self.policy
+        kind = p.perf_kind
+        if kind == "base":
             return 1.0
-        if self.name.startswith("crt"):
-            k = int(self.name[3:])
-            # circuit-only: every PE protects its top-k bits, quantization
-            # unconstrained (q_scale=0), direct redundancy.
-            return (A.protected_pe_cost(k, q_scale=0, policy="direct")
+        if kind == "crt":
+            # circuit-only: every PE protects its top-nb_th bits.
+            return (A.protected_pe_cost(p.circuit.nb_th,
+                                        q_scale=p.algorithm.q_scale,
+                                        policy=p.circuit.pe_policy)
                     / A.pe_cost())
-        if self.name == "arch":
+        if kind == "arch":
             # spatial TMR: voting logic + control on the existing array
             return 1.0 + (A.GE_VOTER * A.OUT_BITS * 3) / (A.pe_cost() * 9)
-        if self.name == "alg":
+        if kind == "alg":
             return 1.0  # temporal redundancy: no extra hardware
-        if self.name == "cl":
-            r = A.array_area(array_dim, ft.nb_th, ft.q_scale, ft.pe_policy,
-                             dot_size=ft.dot_size, ib_th=ft.ib_th)
-            return r["relative"]
-        raise ValueError(self.name)
+        # cross-layer: selectively hardened array + DPPU
+        r = A.array_area(array_dim, p.circuit.nb_th, p.algorithm.q_scale,
+                         p.circuit.pe_policy, dot_size=p.arch.dot_size,
+                         ib_th=p.circuit.ib_th)
+        return r["relative"]
 
     # ---- performance ------------------------------------------------------
     def perf_loss(self, layers: Sequence[P.Gemm], array_dim: int = 32) -> float:
-        cfg = P.DlaConfig(array_dim=array_dim, dot_size=self.ft.dot_size,
-                          data_reuse=self.ft.data_reuse)
-        kind = {"base": "base", "crt1": "crt", "crt2": "crt", "crt3": "crt",
-                "arch": "arch", "alg": "alg", "cl": "cl"}[self.name]
-        return P.perf_loss(layers, cfg, kind, s_th=self.ft.s_th)
+        return P.perf_loss(layers, self._dla(array_dim), self.policy.perf_kind,
+                           s_th=self.policy.algorithm.s_th)
 
     def extra_io(self, layers: Sequence[P.Gemm], array_dim: int = 32) -> float:
-        cfg = P.DlaConfig(array_dim=array_dim, dot_size=self.ft.dot_size,
-                          data_reuse=self.ft.data_reuse)
-        kind = {"base": "base", "crt1": "crt", "crt2": "crt", "crt3": "crt",
-                "arch": "arch", "alg": "alg", "cl": "cl"}[self.name]
-        return P.io_bytes(layers, cfg, kind, s_th=self.ft.s_th)["extra_over_weights"]
+        io = P.io_bytes(layers, self._dla(array_dim), self.policy.perf_kind,
+                        s_th=self.policy.algorithm.s_th)
+        return io["extra_over_weights"]
 
 
-def make_strategies(cl: FTConfig | None = None) -> dict[str, Strategy]:
-    """The paper's comparison set.  `cl` is the DSE-optimized TMR-CL config."""
-    base = FTConfig(strategy="base")
-    out = {
-        "base": Strategy("base", base),
-        "crt1": Strategy("crt1", dataclasses.replace(base, strategy="crt1")),
-        "crt2": Strategy("crt2", dataclasses.replace(base, strategy="crt2")),
-        "crt3": Strategy("crt3", dataclasses.replace(base, strategy="crt3")),
-        "arch": Strategy("arch", dataclasses.replace(base, strategy="arch")),
-        "alg": Strategy("alg", dataclasses.replace(base, strategy="alg")),
-        "cl": Strategy("cl", cl or FTConfig(strategy="cl")),
-    }
-    return out
+def make_strategies(cl=None) -> dict[str, Strategy]:
+    """The paper's comparison set.  `cl` is the DSE-optimized TMR-CL design
+    (a ProtectionPolicy, a legacy FTConfig, or None for the registry
+    default)."""
+    pols = paper_policies(as_policy(cl))
+    return {name: Strategy(name, p) for name, p in pols.items()}

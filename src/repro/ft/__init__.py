@@ -1,0 +1,24 @@
+"""``repro.ft`` — the public fault-tolerance API.
+
+One protection vocabulary for serving, training, DSE and benchmarks:
+
+    from repro import ft
+
+    policy = ft.get_policy("cl", ber=1e-3, ib_th=4)       # registry lookup
+    y = ft.protect_linear(key, x, w, policy, important=m) # reference backend
+    y = ft.protect_linear(key, x, w, policy, important=m,
+                          backend="pallas")               # fused TPU kernel
+
+Policies are frozen-dataclass pytrees whose only dynamic leaf is ``ber``:
+
+    pols = policy.with_ber(jnp.logspace(-5, -2, 16))
+    ys = jax.vmap(lambda p: ft.protect_linear(key, x, w, p))(pols)
+"""
+# Import order matters: policy/registry/compat must be bound before api —
+# api pulls in repro.core, whose package __init__ imports back from repro.ft.
+from repro.ft.policy import (AlgorithmLayer, ArchLayer,  # noqa: F401
+                             CircuitLayer, ProtectionPolicy)
+from repro.ft.registry import (get_policy, list_policies,  # noqa: F401
+                               paper_policies, register_policy)
+from repro.ft.compat import as_policy, from_ftconfig  # noqa: F401
+from repro.ft.api import BACKENDS, calibrate_t, protect_linear  # noqa: F401

@@ -1,0 +1,182 @@
+"""``protect_linear`` — the single fault-tolerant linear entry point.
+
+Two backends compute the same FlexHyCA semantics:
+
+  * ``backend="reference"`` — the bit-exact functional model (the former
+    ``repro.core.flexhyca.ft_linear`` math), jitted with the policy's
+    structure static and its BER traced, so BER sweeps vmap/scan over one
+    executable.
+  * ``backend="pallas"`` — the fused TPU kernel
+    (``repro.kernels.protected_mm``): int8 MXU matmul, 24-bit saturating
+    accumulate, Q_scale-constrained truncation and selective bit protection
+    in the epilogue of the same tile pass.  The truncation LSB ``t`` is
+    per-layer deployment state on the DLA; it is calibrated from the inputs
+    when not supplied, so this backend needs concrete (non-traced) operands.
+    The kernel models ECC-protected weight SRAM, so ``policy.weight_faults``
+    does not apply on this path.
+
+Both backends agree bit-exactly at BER 0 and draw from independent RNG
+streams otherwise (the kernel uses pre-generated uint32 planes; the
+reference uses per-bit bernoulli draws).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import faults
+from repro.core import quantization as Q
+from repro.ft.policy import ProtectionPolicy
+
+BACKENDS = ("reference", "pallas")
+
+
+def calibrate_t(x, w, q_scale: int = 0) -> int:
+    """Pick a layer's truncation LSB from calibration data — deployment
+    state for the pallas backend (whose kernel takes ``t`` statically)."""
+    from repro.kernels.protected_mm.ops import calibrate_t as _calibrate
+    return _calibrate(x, w, q_scale=q_scale)
+
+
+def protect_linear(key: jax.Array, x: jax.Array, w: jax.Array,
+                   policy: ProtectionPolicy,
+                   important: jax.Array | None = None, *,
+                   layer_protected: bool = True,
+                   backend: str = "reference",
+                   t: int | None = None,
+                   interpret: bool = True) -> jax.Array:
+    """Fault-tolerant linear: float in/out, faulty quantized DLA inside.
+
+    Args:
+      x: (..., K) activations.  w: (K, N) weights.
+      policy: a :class:`ProtectionPolicy` (see ``repro.ft.get_policy``).
+      important: (N,) bool mask of important output channels (Algorithm 1);
+        consumed only by recompute policies.
+      layer_protected: for whole-layer-TMR policies (arch/alg) — whether this
+        layer is in the protected (sensitive) set.
+      backend: "reference" | "pallas".
+      t: truncation LSB for the pallas backend (calibrated from x/w if None).
+      interpret: run the pallas kernel in interpret mode (CPU).
+    Returns (..., N) float32.
+    """
+    if backend == "reference":
+        return _protect_reference(key, x, w, policy, important,
+                                  layer_protected)
+    if backend == "pallas":
+        return _protect_pallas(key, x, w, policy, important,
+                               layer_protected=layer_protected, t=t,
+                               interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}; expected one of "
+                     f"{BACKENDS}")
+
+
+# ------------------------------------------------------------ reference ----
+@partial(jax.jit, static_argnames=("layer_protected",))
+def _protect_reference(key, x, w, policy: ProtectionPolicy, important,
+                       layer_protected: bool):
+    """The former ``ft_linear`` datapath, structure-dispatched on the policy.
+
+    Every fault-injection site executes unconditionally with the (possibly
+    traced) BER — at BER 0 each injection is the identity, so the output is
+    bit-identical to the branch-skipping legacy code while remaining
+    vmap-able over a BER axis.
+    """
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1])
+    kw, ka, kd = jax.random.split(key, 3)
+    n = w.shape[1]
+    alg, arch, circ = policy.algorithm, policy.arch, policy.circuit
+
+    xq, sx = Q.quantize(x2)
+    wq, sw = Q.quantize(w)
+    wq_f = (faults.inject_weight_faults(kw, wq, policy.ber)
+            if policy.weight_faults else wq)
+    acc = Q.saturate(jnp.matmul(xq, wq_f, preferred_element_type=jnp.int32))
+    t = Q.choose_trunc_lsb(jnp.max(jnp.abs(acc)), q_scale=alg.q_scale)
+    yq = Q.truncate_acc(acc, t)
+
+    # circuit layer: per-channel protected high bits
+    imp = jnp.zeros((n,), bool) if important is None else important
+    protect = jnp.where(imp, circ.ib_th, circ.nb_th).astype(jnp.int32)
+    if arch.whole_layer_tmr and layer_protected:
+        # spatial/temporal TMR of the whole layer: every bit voted
+        protect = jnp.full((n,), Q.OUT_BITS, jnp.int32)
+    yq_f = faults.inject_output_faults(ka, yq, policy.ber,
+                                       protect_top=protect)
+
+    if arch.recompute and important is not None:
+        # architecture layer: DPPU recomputes important channels on its own
+        # (clean weight SRAM + IB_TH-bit-protected MACs) and overrides.
+        acc_d = Q.saturate(jnp.matmul(xq, wq,
+                                      preferred_element_type=jnp.int32))
+        yq_d = Q.truncate_acc(acc_d, t)
+        yq_d = faults.inject_output_faults(
+            kd, yq_d, policy.ber,
+            protect_top=jnp.full((n,), circ.ib_th, jnp.int32))
+        yq_f = jnp.where(important[None, :], yq_d, yq_f)
+
+    scale = sx * sw * (2.0 ** t.astype(jnp.float32))
+    y = yq_f.astype(jnp.float32) * scale
+    return y.reshape(*orig_shape[:-1], n)
+
+
+# --------------------------------------------------------------- pallas ----
+def _pad_to(a: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, -s % m) for s, m in zip(a.shape, mults)]
+    if any(p for _, p in pads):
+        a = jnp.pad(a, pads)
+    return a
+
+
+def _protect_pallas(key, x, w, policy: ProtectionPolicy, important, *,
+                    layer_protected: bool, t: int | None, interpret: bool,
+                    block: int = 128):
+    from repro.kernels.fault_inject.ops import random_planes
+    from repro.kernels.protected_mm.kernel import protected_mm
+
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1]).astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    n = w.shape[1]
+
+    xq, sx = Q.quantize(x2)
+    wq, sw = Q.quantize(w)
+    if t is None:
+        if isinstance(x, jax.core.Tracer) or isinstance(w, jax.core.Tracer):
+            raise ValueError(
+                "backend='pallas' under jit/vmap needs a pre-calibrated "
+                "truncation LSB: pass protect_linear(..., t=...) (see "
+                "repro.ft.calibrate_t) or use backend='reference'")
+        acc = Q.saturate(jnp.matmul(xq, wq,
+                                    preferred_element_type=jnp.int32))
+        t = int(Q.choose_trunc_lsb(jnp.max(jnp.abs(acc)),
+                                   q_scale=policy.algorithm.q_scale))
+
+    circ = policy.circuit
+    if policy.arch.whole_layer_tmr:
+        ib = nb = Q.OUT_BITS if layer_protected else 0
+    else:
+        ib, nb = circ.ib_th, circ.nb_th
+    if important is None or not policy.uses_importance:
+        imp = jnp.zeros((n,), jnp.int32)
+    else:
+        imp = important.astype(jnp.int32)
+
+    # tile-align all operands (zero padding is exact for the int matmul and
+    # sliced away before the rescale)
+    xq8 = _pad_to(xq.astype(jnp.int8), (block, block))
+    wq8 = _pad_to(wq.astype(jnp.int8), (block, block))
+    imp_p = _pad_to(imp, (block,))
+    mp, np_ = xq8.shape[0], wq8.shape[1]
+    k1, k2 = jax.random.split(key)
+    rnd_o = random_planes(k1, (mp, np_))
+    rnd_i = random_planes(k2, (mp, np_))
+
+    yq = protected_mm(xq8, wq8, rnd_o, rnd_i, imp_p, t=t,
+                      ber=float(policy.ber), ib=ib, nb=nb,
+                      bm=block, bn=block, bk=block, interpret=interpret)
+    scale = sx * sw * (2.0 ** t)
+    y = yq[:x2.shape[0], :n].astype(jnp.float32) * scale
+    return y.reshape(*orig_shape[:-1], n)

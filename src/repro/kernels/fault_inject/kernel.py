@@ -19,6 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, rnd_ref, prot_ref, o_ref, *, ber: float, bits: int):
     thresh = jnp.uint32(min(int(ber * (1 << 32)), (1 << 32) - 1))
@@ -54,7 +57,7 @@ def fault_inject(x, rnd, protect, ber: float, bits: int = 8,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, rnd, protect.reshape(1, N))

@@ -80,18 +80,34 @@ class EmuCtx:
 
 
 class FTCtx:
-    """Per-forward fault-tolerance context: FTConfig + per-site importance
-    masks + deterministic per-site PRNG keys.  None => clean bf16 math."""
+    """Per-forward fault-tolerance context: a ProtectionPolicy (legacy
+    FTConfig and registry names are converted) + per-site importance masks +
+    deterministic per-site PRNG keys.  None => clean bf16 math.
 
-    def __init__(self, ft, key, masks=None, protected_layers=None):
-        self.ft = ft
+    ``backend`` selects the protect_linear implementation per forward:
+    "reference" (functional model) or "pallas" (fused TPU kernel).  The
+    pallas kernel takes the truncation LSB statically, so under jit supply
+    ``t`` — one int for all sites or a per-site {name: int} calibration
+    table (repro.ft.calibrate_t) — and ``interpret=False`` to run the
+    compiled kernel on TPU."""
+
+    def __init__(self, ft, key, masks=None, protected_layers=None,
+                 backend: str = "reference", t=None, interpret: bool = True):
+        from repro.ft import as_policy
+        self.ft = as_policy(ft)
         self.key = key
         self.masks = masks or {}
         self.protected_layers = protected_layers  # set of layer names (arch/alg)
+        self.backend = backend
+        self.t = t
+        self.interpret = interpret
 
     def site_key(self, name: str):
         import zlib
         return jax.random.fold_in(self.key, zlib.crc32(name.encode()))
+
+    def site_t(self, name: str):
+        return self.t.get(name) if isinstance(self.t, dict) else self.t
 
 
 def linear(x: jax.Array, w: jax.Array, b=None, *,
@@ -114,15 +130,17 @@ def linear(x: jax.Array, w: jax.Array, b=None, *,
         y = x @ w.reshape(w.shape[0], -1)
         y = y.reshape(*x.shape[:-1], *w.shape[1:])
     else:
-        from repro.core.flexhyca import ft_linear
+        from repro.ft import protect_linear
         w2 = w.reshape(w.shape[0], -1).astype(jnp.float32)
         imp = ftc.masks.get(name)
         prot = (ftc.protected_layers is None
                 or name.split("/")[0] in ftc.protected_layers)
-        y = ft_linear(ftc.site_key(name), x.astype(jnp.float32).reshape(-1, w.shape[0]),
-                      w2, ftc.ft,
-                      important=None if imp is None else jnp.asarray(imp),
-                      layer_protected=prot)
+        y = protect_linear(ftc.site_key(name),
+                           x.astype(jnp.float32).reshape(-1, w.shape[0]),
+                           w2, ftc.ft,
+                           important=None if imp is None else jnp.asarray(imp),
+                           layer_protected=prot, backend=ftc.backend,
+                           t=ftc.site_t(name), interpret=ftc.interpret)
         y = y.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
     if b is not None:
         y = y + b.astype(y.dtype)

@@ -42,17 +42,18 @@ class Model:
         return nll + aux, {"nll": nll, "aux": aux}
 
     # ------------------------------------------------------------ prefill --
-    def prefill(self, params, batch, max_len: int | None = None):
+    def prefill(self, params, batch, max_len: int | None = None, ftc=None):
         """Forward over a prompt, building the KV/state caches.  `max_len`
-        reserves decode headroom in full-attention caches.
+        reserves decode headroom in full-attention caches.  `ftc` routes every
+        projection through the fault-tolerant DLA path (repro.ft).
         Returns (caches, last_token_logits)."""
         cfg, run = self.cfg, self.run
         x, _, _, enc_inp = T.assemble_inputs(params, cfg, batch)
         enc_out = None
         if cfg.enc_dec:
-            enc_out = T.encode(params, enc_inp, cfg=cfg, run=run)
+            enc_out = T.encode(params, enc_inp, cfg=cfg, run=run, ftc=ftc)
         h, caches, _ = T.backbone(params, x, cfg=cfg, run=run, mode="prefill",
-                                  enc_out=enc_out)
+                                  ftc=ftc, enc_out=enc_out)
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         if max_len is not None and caches is not None:
             S = x.shape[1]
@@ -78,7 +79,7 @@ class Model:
         return caches, T.last_logits(params, cfg, h)
 
     # ------------------------------------------------------------- decode --
-    def decode_step(self, params, caches, token, pos):
+    def decode_step(self, params, caches, token, pos, ftc=None):
         """One-token decode.  token: (B,) int32; pos: () int32 (position of
         this token).  Returns (new_caches, logits (B, V))."""
         cfg, run = self.cfg, self.run
@@ -87,7 +88,7 @@ class Model:
         positions = jnp.broadcast_to(pos, (B, 1))
         h, new_caches, _ = T.backbone(params, x, cfg=cfg, run=run,
                                       mode="decode", caches=caches,
-                                      positions=positions)
+                                      positions=positions, ftc=ftc)
         h = rms_norm(h, params["final_norm"], cfg.norm_eps)
         return new_caches, T.last_logits(params, cfg, h)
 

@@ -3,6 +3,11 @@
 The decode step donates its caches, so serving memory is a single cache
 allocation regardless of generation length.  Works on any mesh: the cache is
 batch-sharded over DP and head-sharded over 'model' (see parallel.sharding).
+
+Fault-tolerant serving: pass a ``repro.ft`` protection policy (object or
+registry name) and every projection of prefill and decode computes through
+the faulty-DLA path with that policy's protection — the serving-side view of
+the paper's cross-layer stack.
 """
 from __future__ import annotations
 
@@ -23,19 +28,40 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, model, params, mesh=None, cfg: ServeConfig | None = None):
+    def __init__(self, model, params, mesh=None, cfg: ServeConfig | None = None,
+                 policy=None, ft_backend: str = "reference", ft_t=None,
+                 ft_interpret: bool = True):
+        """`policy`: a repro.ft ProtectionPolicy (or registry name) applied to
+        every projection.  For ft_backend="pallas" under the jitted serve
+        loop, `ft_t` must carry the calibrated truncation LSB(s) — one int or
+        a per-site {name: int} table — and ft_interpret=False runs the
+        compiled kernel on TPU."""
+        from repro.ft import as_policy
         self.model, self.params = model, params
         self.mesh = mesh
         self.cfg = cfg or ServeConfig()
+        self.policy = as_policy(policy)
+        self.ft_backend = ft_backend
+        self.ft_t = ft_t
+        self.ft_interpret = ft_interpret
         ctx = S.make_ctx(mesh) if mesh is not None else None
 
-        def _prefill(params, batch, max_len):
-            with mesh_ctx(ctx):
-                return model.prefill(params, batch, max_len=max_len)
+        def _ftc(ftkey):
+            if self.policy is None:
+                return None
+            from repro.models.common import FTCtx
+            return FTCtx(self.policy, ftkey, backend=self.ft_backend,
+                         t=self.ft_t, interpret=self.ft_interpret)
 
-        def _decode(params, caches, token, pos):
+        def _prefill(params, batch, max_len, ftkey):
             with mesh_ctx(ctx):
-                return model.decode_step(params, caches, token, pos)
+                return model.prefill(params, batch, max_len=max_len,
+                                     ftc=_ftc(ftkey))
+
+        def _decode(params, caches, token, pos, ftkey):
+            with mesh_ctx(ctx):
+                return model.decode_step(params, caches, token, pos,
+                                         ftc=_ftc(ftkey))
 
         self._prefill = jax.jit(_prefill, static_argnums=(2,))
         self._decode = jax.jit(_decode, donate_argnums=(1,))
@@ -47,7 +73,8 @@ class Engine:
         if self.model.cfg.frontend == "vision":
             prompt_len += self.model.cfg.n_frontend_tokens
         max_len = prompt_len + n_new
-        caches, logits = self._prefill(self.params, batch, max_len)
+        ftkey = jax.random.PRNGKey(self.cfg.seed + 7919)  # fault-draw stream
+        caches, logits = self._prefill(self.params, batch, max_len, ftkey)
         key = jax.random.PRNGKey(self.cfg.seed)
         out = []
         tok = self._sample(logits, key)
@@ -55,7 +82,8 @@ class Engine:
             out.append(tok)
             caches, logits = self._decode(
                 self.params, caches, tok,
-                jnp.asarray(prompt_len + i, jnp.int32))
+                jnp.asarray(prompt_len + i, jnp.int32),
+                jax.random.fold_in(ftkey, i + 1))
             key = jax.random.fold_in(key, i)
             tok = self._sample(logits, key)
         return jnp.stack(out, axis=1)

@@ -1,9 +1,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import faults
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import faults  # noqa: E402
 
 
 def test_zero_ber_identity():

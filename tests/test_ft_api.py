@@ -1,0 +1,311 @@
+"""The repro.ft public API: registry round-trip, pytree/vmap semantics,
+bit-exact parity with the legacy ``ft_linear`` implementation (frozen below
+as the oracle), and the pallas backend."""
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ft
+from repro.core import faults, quantization as Q
+from repro.core.flexhyca import FTConfig, clean_linear
+
+POLICY_NAMES = ("base", "crt1", "crt2", "crt3", "arch", "alg", "cl")
+
+
+# --------------------------------------------------------------------------
+# Frozen copy of the seed ``repro.core.flexhyca.ft_linear`` (pre-registry):
+# the parity oracle pinning the historical bit-exact semantics.
+# --------------------------------------------------------------------------
+def _legacy_strategy_protect(cfg: FTConfig, important, n: int):
+    if cfg.strategy == "base":
+        return jnp.zeros((n,), jnp.int32), False
+    if cfg.strategy.startswith("crt"):
+        k = int(cfg.strategy[3:])
+        return jnp.full((n,), k, jnp.int32), False
+    if cfg.strategy in ("arch", "alg"):
+        return jnp.zeros((n,), jnp.int32), True
+    if cfg.strategy == "cl":
+        imp = jnp.zeros((n,), bool) if important is None else important
+        return jnp.where(imp, cfg.ib_th, cfg.nb_th).astype(jnp.int32), False
+    raise ValueError(cfg.strategy)
+
+
+@partial(jax.jit, static_argnames=("cfg", "layer_protected"))
+def _legacy_ft_linear(key, x, w, cfg: FTConfig, important=None,
+                      layer_protected: bool = True):
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1])
+    kw, ka, kd = jax.random.split(key, 3)
+
+    q_scale = cfg.q_scale if cfg.strategy == "cl" else 0
+    xq, sx = Q.quantize(x2)
+    wq, sw = Q.quantize(w)
+    if cfg.ber > 0 and cfg.weight_faults:
+        wq_f = faults.inject_weight_faults(kw, wq, cfg.ber)
+    else:
+        wq_f = wq
+    acc = Q.saturate(jnp.matmul(xq, wq_f, preferred_element_type=jnp.int32))
+    t = Q.choose_trunc_lsb(jnp.max(jnp.abs(acc)), q_scale=q_scale)
+    yq = Q.truncate_acc(acc, t)
+
+    protect, whole_layer_tmr = _legacy_strategy_protect(cfg, important,
+                                                        w.shape[1])
+    if cfg.ber > 0:
+        if whole_layer_tmr and layer_protected:
+            yq_f = faults.inject_output_faults(
+                ka, yq, cfg.ber,
+                protect_top=jnp.full((w.shape[1],), 8, jnp.int32))
+        else:
+            yq_f = faults.inject_output_faults(ka, yq, cfg.ber,
+                                               protect_top=protect)
+    else:
+        yq_f = yq
+
+    if cfg.strategy == "cl" and cfg.ber > 0 and important is not None:
+        acc_d = Q.saturate(jnp.matmul(xq, wq,
+                                      preferred_element_type=jnp.int32))
+        yq_d = Q.truncate_acc(acc_d, t)
+        yq_d = faults.inject_output_faults(
+            kd, yq_d, cfg.ber,
+            protect_top=jnp.full((w.shape[1],), cfg.ib_th, jnp.int32))
+        yq_f = jnp.where(important[None, :], yq_d, yq_f)
+
+    scale = sx * sw * (2.0 ** t.astype(jnp.float32))
+    y = yq_f.astype(jnp.float32) * scale
+    return y.reshape(*orig_shape[:-1], w.shape[1])
+
+
+@pytest.fixture(scope="module")
+def xw():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 48))
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 32))
+    return x, w
+
+
+@pytest.fixture(scope="module")
+def imp():
+    return jnp.zeros((32,), bool).at[:8].set(True)
+
+
+# ----------------------------------------------------------------- parity --
+@pytest.mark.parametrize("name", POLICY_NAMES)
+@pytest.mark.parametrize("ber", (0.0, 0.01))
+def test_protect_linear_matches_legacy(xw, imp, name, ber):
+    """ft.protect_linear must be bit-exact with the seed implementation for
+    every registered paper design."""
+    x, w = xw
+    key = jax.random.PRNGKey(7)
+    cfg = FTConfig(ber=ber, strategy=name)
+    y_new = ft.protect_linear(key, x, w, ft.from_ftconfig(cfg), important=imp)
+    y_old = _legacy_ft_linear(key, x, w, cfg, important=imp)
+    np.testing.assert_array_equal(np.asarray(y_new), np.asarray(y_old))
+
+
+@pytest.mark.parametrize("layer_protected", (True, False))
+def test_parity_whole_layer_tmr(xw, layer_protected):
+    x, w = xw
+    key = jax.random.PRNGKey(11)
+    cfg = FTConfig(ber=0.005, strategy="arch", weight_faults=False)
+    y_new = ft.protect_linear(key, x, w, ft.from_ftconfig(cfg),
+                              layer_protected=layer_protected)
+    y_old = _legacy_ft_linear(key, x, w, cfg,
+                              layer_protected=layer_protected)
+    np.testing.assert_array_equal(np.asarray(y_new), np.asarray(y_old))
+
+
+def test_parity_tuned_cl(xw, imp):
+    x, w = xw
+    key = jax.random.PRNGKey(13)
+    cfg = FTConfig(ber=0.02, strategy="cl", s_th=0.25, ib_th=4, nb_th=2,
+                   q_scale=4, weight_faults=False)
+    y_new = ft.protect_linear(key, x, w, ft.from_ftconfig(cfg), important=imp)
+    y_old = _legacy_ft_linear(key, x, w, cfg, important=imp)
+    np.testing.assert_array_equal(np.asarray(y_new), np.asarray(y_old))
+
+
+def test_ft_linear_shim_matches_legacy(xw, imp):
+    from repro.core.flexhyca import ft_linear
+    x, w = xw
+    key = jax.random.PRNGKey(17)
+    cfg = FTConfig(ber=0.01, strategy="cl")
+    with pytest.deprecated_call():
+        y_shim = ft_linear(key, x, w, cfg, important=imp)
+    y_old = _legacy_ft_linear(key, x, w, cfg, important=imp)
+    np.testing.assert_array_equal(np.asarray(y_shim), np.asarray(y_old))
+
+
+# --------------------------------------------------------------- registry --
+def test_registry_roundtrip():
+    pol = ft.ProtectionPolicy(
+        name="fat-test", arch=ft.ArchLayer(recompute=True),
+        circuit=ft.CircuitLayer(ib_th=5, nb_th=2))
+    try:
+        ft.register_policy(pol)
+        assert ft.get_policy("fat-test") == pol
+        assert "fat-test" in ft.list_policies()
+        with pytest.raises(ValueError, match="already registered"):
+            ft.register_policy(pol)
+        ft.register_policy(pol.tune(nb_th=3), overwrite=True)
+        assert ft.get_policy("fat-test").circuit.nb_th == 3
+    finally:
+        ft.registry._REGISTRY.pop("fat-test", None)
+
+
+def test_get_policy_unknown_name():
+    with pytest.raises(KeyError, match="unknown protection policy"):
+        ft.get_policy("does-not-exist")
+
+
+def test_paper_designs_registered():
+    for name in POLICY_NAMES:
+        assert name in ft.list_policies()
+
+
+def test_tune_routes_fields_to_components():
+    p = ft.get_policy("cl", ber=1e-3, ib_th=4, s_th=0.2, dot_size=16)
+    assert p.ber == 1e-3
+    assert p.circuit.ib_th == 4
+    assert p.algorithm.s_th == 0.2
+    assert p.arch.dot_size == 16
+    with pytest.raises(TypeError, match="unknown protection-policy field"):
+        ft.get_policy("cl", bogus_knob=1)
+
+
+def test_perf_kind_derived_from_structure():
+    kinds = {n: ft.get_policy(n).perf_kind for n in POLICY_NAMES}
+    assert kinds == {"base": "base", "crt1": "crt", "crt2": "crt",
+                     "crt3": "crt", "arch": "arch", "alg": "alg", "cl": "cl"}
+
+
+# ----------------------------------------------------------------- pytree --
+def test_policy_is_pytree_with_ber_leaf():
+    p = ft.get_policy("cl", ber=0.25)
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    assert leaves == [0.25]
+    p2 = jax.tree_util.tree_unflatten(treedef, [0.5])
+    assert p2 == dataclasses.replace(p, ber=0.5)
+
+
+def test_vmap_over_ber_axis(xw, imp):
+    """One executable sweeps the BER axis: row 0 (BER 0) is clean, damage
+    grows along the axis."""
+    x, w = xw
+    key = jax.random.PRNGKey(19)
+    bers = jnp.array([0.0, 1e-3, 5e-2], jnp.float32)
+    pols = ft.get_policy("cl", weight_faults=False, q_scale=0).with_ber(bers)
+    ys = jax.vmap(
+        lambda p: ft.protect_linear(key, x, w, p, important=imp))(pols)
+    assert ys.shape == (3, 64, 32)
+    ref = clean_linear(x, w, q_scale=0)
+
+    def dmg(y):
+        return float(jnp.sqrt(jnp.mean((y - ref) ** 2)))
+
+    assert dmg(ys[0]) < 1e-6          # BER 0 row is exactly clean
+    assert dmg(ys[0]) < dmg(ys[1]) < dmg(ys[2])
+
+
+def test_scan_over_ber_axis(xw, imp):
+    x, w = xw
+    key = jax.random.PRNGKey(23)
+    pols = ft.get_policy("base").with_ber(jnp.array([0.0, 1e-2], jnp.float32))
+    _, ys = jax.lax.scan(
+        lambda c, p: (c, ft.protect_linear(key, x, w, p)), 0, pols)
+    assert ys.shape == (2, 64, 32)
+    # and the static-BER call is bit-identical to the scanned row
+    y_static = ft.protect_linear(key, x, w, ft.get_policy("base", ber=1e-2))
+    np.testing.assert_array_equal(np.asarray(ys[1]), np.asarray(y_static))
+
+
+# --------------------------------------------------------------- backends --
+def test_pallas_backend_clean_parity(xw, imp):
+    """Both backends are bit-exact at BER 0 (same quantized datapath)."""
+    x, w = xw
+    key = jax.random.PRNGKey(29)
+    for name in ("base", "cl", "crt2"):
+        pol = ft.get_policy(name, weight_faults=False)
+        y_ref = ft.protect_linear(key, x, w, pol, important=imp,
+                                  backend="reference")
+        y_pal = ft.protect_linear(key, x, w, pol, important=imp,
+                                  backend="pallas")
+        np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                                   rtol=1e-6)
+
+
+def test_pallas_backend_protection_helps(xw):
+    """Under fault the backends draw from different RNG streams; the
+    protection ordering (more protected bits => less damage) must hold."""
+    x, w = xw
+    key = jax.random.PRNGKey(31)
+    ref = clean_linear(x, w)
+
+    def dmg(y):
+        return float(jnp.sqrt(jnp.mean((y - ref) ** 2)))
+
+    d = {}
+    for name in ("base", "crt3"):
+        pol = ft.get_policy(name, ber=0.02, weight_faults=False)
+        d[name] = dmg(ft.protect_linear(key, x, w, pol, backend="pallas"))
+    assert d["crt3"] < d["base"]
+
+
+def test_pallas_whole_layer_tmr(xw):
+    x, w = xw
+    key = jax.random.PRNGKey(37)
+    pol = ft.get_policy("arch", ber=0.02, weight_faults=False)
+    ref = clean_linear(x, w)
+
+    def dmg(y):
+        return float(jnp.sqrt(jnp.mean((y - ref) ** 2)))
+
+    prot = dmg(ft.protect_linear(key, x, w, pol, backend="pallas",
+                                 layer_protected=True))
+    unprot = dmg(ft.protect_linear(key, x, w, pol, backend="pallas",
+                                   layer_protected=False))
+    assert prot < unprot
+
+
+def test_unknown_backend_raises(xw):
+    x, w = xw
+    with pytest.raises(ValueError, match="unknown backend"):
+        ft.protect_linear(jax.random.PRNGKey(0), x, w, ft.get_policy("base"),
+                          backend="cuda")
+
+
+def test_pallas_under_jit_needs_calibrated_t(xw):
+    """Inside jit the pallas backend cannot self-calibrate (its kernel takes
+    t statically): without t it must fail with guidance, with a calibrated t
+    it must match the eager pallas result."""
+    x, w = xw
+    key = jax.random.PRNGKey(41)
+    pol = ft.get_policy("crt2", ber=0.01, weight_faults=False)
+
+    with pytest.raises(ValueError, match="pre-calibrated truncation LSB"):
+        jax.jit(lambda k, a, b: ft.protect_linear(k, a, b, pol,
+                                                  backend="pallas"))(key, x, w)
+
+    t = ft.calibrate_t(x, w, q_scale=pol.algorithm.q_scale)
+    y_jit = jax.jit(lambda k, a, b: ft.protect_linear(
+        k, a, b, pol, backend="pallas", t=t))(key, x, w)
+    y_eager = ft.protect_linear(key, x, w, pol, backend="pallas")
+    # jit fuses the final rescale differently; integer datapath is identical
+    np.testing.assert_allclose(np.asarray(y_jit), np.asarray(y_eager),
+                               rtol=1e-5)
+
+
+def test_ftctx_pallas_backend_with_t_table(xw):
+    """FTCtx threads backend/t through the model-side linear() wrapper, so
+    jitted model code can run the kernel path with a calibration table."""
+    from repro.models.common import FTCtx, linear
+    x, w = xw
+    pol = ft.get_policy("crt1", ber=0.005, weight_faults=False)
+    t = ft.calibrate_t(x, w)
+    ftc = FTCtx(pol, jax.random.PRNGKey(43), backend="pallas",
+                t={"site": t})
+    y = jax.jit(lambda a, b: linear(a, b, ftc=ftc, name="site"))(x, w)
+    assert y.shape == (64, 32)
+    assert bool(jnp.isfinite(y).all())

@@ -4,9 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.kernels.fault_inject.kernel import fault_inject
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels.fault_inject.kernel import fault_inject  # noqa: E402
 from repro.kernels.fault_inject.ops import inject, random_planes
 from repro.kernels.fault_inject.ref import inject_ref
 from repro.kernels.protected_mm.kernel import protected_mm
