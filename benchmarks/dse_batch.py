@@ -1,0 +1,90 @@
+"""dse_batched_vs_sequential — oracle wall-time per evaluated config.
+
+Runs the same reduced Table-I DSE (VGG oracle, fixed seed) twice: once
+sequentially (batch_size=1, one fault-injection executable compiled per
+candidate structure it visits) and once batched (batch_size=8, candidates
+share one vmapped executable via ``CnnOracle.accuracy_batch``).  Reports the
+accuracy-oracle wall-time divided by the number of evaluated configs for
+each mode — the number the batched engine exists to push down — plus the
+best-config feasibility of both runs (they must agree).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.workloads import vgg16_gemms
+from repro.core import bayesopt as B
+from repro.core.evaluate import trained_cnn
+from repro.core.pipeline import optimize
+
+BER = 1e-3
+SEED = 17
+ITERS = 16
+BATCH = 8
+
+
+def _space():
+    """Reduced Table-I space (the fig15 DSE grid)."""
+    return [
+        B.Param("s_th", (0.05, 0.1, 0.15, 0.2), monotone=+1),
+        B.Param("ib_th", (2, 3, 4), monotone=+1),
+        B.Param("nb_th", (1, 2, 3), monotone=+1),
+        B.Param("q_scale", (4, 7, 10), monotone=0),
+        B.Param("s_policy", ("uniform", "global"), monotone=0),
+        B.Param("dot_size", (16, 52, 128), monotone=0),
+        B.Param("data_reuse", (True, False), monotone=0),
+        B.Param("pe_policy", ("configurable", "direct"), monotone=0),
+    ]
+
+
+def dse_batched_vs_sequential():
+    o = trained_cnn("vgg")
+    clean = o.accuracy(None)
+    cons = B.Constraints(acc_min=0.94 * clean, perf_max=0.10, bw_max=0.10)
+    layers = vgg16_gemms()
+
+    rows = []
+    per_cfg = {}
+    feasible = {}
+    for mode, batch in (("batched", BATCH), ("sequential", 1)):
+        jax.clear_caches()  # neither mode inherits the other's executables
+        timer = {"s": 0.0, "configs": 0}
+
+        def acc_one(pol):
+            t0 = time.perf_counter()
+            a = o.accuracy(pol)
+            timer["s"] += time.perf_counter() - t0
+            timer["configs"] += 1
+            return a
+
+        def acc_many(pols):
+            t0 = time.perf_counter()
+            accs = o.accuracy_batch(pols)
+            timer["s"] += time.perf_counter() - t0
+            timer["configs"] += len(pols)
+            return accs
+
+        res = optimize(acc_one, layers, cons, BER, iter_max_step=ITERS,
+                       seed=SEED, space=_space(), batch_size=batch,
+                       acc_oracle_batch=acc_many if batch > 1 else None)
+        us = 1e6 * timer["s"] / max(timer["configs"], 1)
+        per_cfg[mode] = us
+        feasible[mode] = res.dse.best is not None
+        rows.append(dict(mode=mode, batch_size=batch,
+                         configs=timer["configs"],
+                         oracle_s=round(timer["s"], 2),
+                         oracle_us_per_config=round(us, 0),
+                         best_area=(None if res.area_overhead is None
+                                    else round(res.area_overhead, 4)),
+                         feasible=feasible[mode],
+                         pruned=res.dse.pruned))
+    derived = dict(
+        speedup_per_config=round(per_cfg["sequential"] / per_cfg["batched"],
+                                 2),
+        sequential_us_per_config=round(per_cfg["sequential"], 0),
+        batched_us_per_config=round(per_cfg["batched"], 0),
+        feasibility_match=feasible["sequential"] == feasible["batched"],
+    )
+    return rows, derived

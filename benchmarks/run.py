@@ -20,6 +20,7 @@ RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results.json")
 def _benchmarks():
     from benchmarks import paper_figs as F
     from benchmarks import roofline as R
+    from benchmarks.dse_batch import dse_batched_vs_sequential
 
     def roofline_single():
         rows = R.full_table("single")
@@ -41,12 +42,15 @@ def _benchmarks():
         "fig13_io_overhead": F.fig13_io_overhead,
         "fig14_bit_area": F.fig14_bit_area,
         "fig15_table2_dse": F.fig15_table2_dse,
+        "dse_batched_vs_sequential": dse_batched_vs_sequential,
         "roofline_single_pod": roofline_single,
         "roofline_multi_pod": roofline_multi,
     }
 
 
-FAST_SKIP = {"fig15_table2_dse"}  # DSE reruns fault-injection many times
+# DSE entries rerun fault injection many times; the batched-vs-sequential
+# comparison deliberately includes a slow sequential arm.
+FAST_SKIP = {"fig15_table2_dse", "dse_batched_vs_sequential"}
 
 
 def main() -> None:

@@ -1,7 +1,12 @@
 """Run the paper's full cross-layer design-space exploration (Fig. 1 / Alg. 3)
 on the reduced VGG benchmark and print the Table-II-style optimum.
 
-  PYTHONPATH=src python examples/crosslayer_dse.py [--ber 1e-3] [--iters 16]
+  PYTHONPATH=src python examples/crosslayer_dse.py [--ber 1e-3] [--iters 16] \
+      [--batch 8]
+
+--batch q proposes q candidates per BO round (constant-liar q-EI) and
+evaluates them through the vmapped batch oracle — one compiled executable
+per candidate *structure* instead of one per candidate (see docs/dse.md).
 """
 import argparse
 import os
@@ -18,6 +23,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ber", type=float, default=1e-3)
     ap.add_argument("--iters", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=1,
+                    help="DSE candidates evaluated per BO round (q-EI)")
     args = ap.parse_args()
 
     print("training the reduced VGG benchmark ...")
@@ -31,7 +38,9 @@ def main():
     print(f"constraints: acc >= {cons.acc_min:.3f}, perf/bw loss <= 10%")
 
     res = optimize(lambda pol: oracle.accuracy(pol), vgg16_gemms(), cons,
-                   args.ber, iter_max_step=args.iters, seed=0)
+                   args.ber, iter_max_step=args.iters, seed=0,
+                   batch_size=args.batch,
+                   acc_oracle_batch=oracle.accuracy_batch)
     if res.policy is None:
         print("no feasible design found — raise --iters")
         return

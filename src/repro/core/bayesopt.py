@@ -6,6 +6,15 @@ bandwidth constraints, with the paper's monotonic pruning: protection
 parameters (S_TH, IB_TH, NB_TH) are monotone in both accuracy and area, so a
 constraint violation at v prunes every v' with component-wise weaker
 protection.
+
+With ``batch_size > 1`` each round proposes q candidates by q-EI with the
+constant-liar heuristic (refit the surrogate pretending each picked point
+already achieved the incumbent, so the next pick moves elsewhere) and hands
+them to ``evaluate_batch`` in one call — the oracle amortizes its
+fault-injection executables across the batch (see docs/dse.md).
+``batch_size=1`` is the exact sequential Algorithm 3.  Dedup (``seen``) and
+monotonic dominance pruning are applied per-candidate at selection time, so
+a batch never contains duplicates or configs already known infeasible.
 """
 from __future__ import annotations
 
@@ -105,19 +114,40 @@ class DseResult:
 
 
 def bayes_design_opt(space: Sequence[Param],
-                     evaluate: Callable[[Mapping], EvalResult],
+                     evaluate: Callable[[Mapping], EvalResult] | None,
                      constraints: Constraints,
                      iter_max_step: int = 64,
                      n_init: int = 12,
                      n_candidates: int = 256,
                      seed: int = 0,
-                     prune_margin: float = 0.02) -> DseResult:
+                     prune_margin: float = 0.02,
+                     batch_size: int = 1,
+                     evaluate_batch: Callable[[list], list] | None = None,
+                     ) -> DseResult:
     """Algorithm 3: Bayesian DSE with monotonic constraint pruning.
 
     prune_margin: accuracy oracles are stochastic (fault-injection draws), so
     a point only enters the dominance-pruning record when it misses the
     accuracy bar by more than the margin — otherwise one unlucky draw on a
-    strongly-protected config would prune the entire space below it."""
+    strongly-protected config would prune the entire space below it.
+
+    batch_size: candidates proposed (and evaluated) per BO round.  1 keeps
+    the exact sequential behavior; q > 1 selects by constant-liar q-EI and
+    calls ``evaluate_batch`` with up to q configs at once.
+
+    evaluate_batch: ``list[cfg dict] -> list[EvalResult]``, positionally
+    aligned.  Defaults to mapping ``evaluate`` over the batch; required when
+    ``evaluate`` is None."""
+    if evaluate is None and evaluate_batch is None:
+        raise ValueError("need evaluate or evaluate_batch")
+    if batch_size < 1:
+        raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+
+    def eval_many(cfgs: list[dict]) -> list[EvalResult]:
+        if evaluate_batch is not None and (len(cfgs) > 1 or evaluate is None):
+            return list(evaluate_batch(cfgs))
+        return [evaluate(c) for c in cfgs]
+
     rng = np.random.default_rng(seed)
     names = [p.name for p in space]
     mono = np.array([p.monotone for p in space])
@@ -151,17 +181,10 @@ def bayes_design_opt(space: Sequence[Param],
     best_cfg = None
     penalty = 10.0
 
-    def run(v: tuple):
-        nonlocal best_eval, best_cfg, pruned
-        if v in seen:
-            return
-        u = to_unit(v)
-        if pruned_by_dominance(u):
-            pruned += 1
-            return
-        seen.add(v)
+    def commit(v: tuple, u: np.ndarray, r: EvalResult):
+        """Record one oracle result: surrogate data, pruning record, best."""
+        nonlocal best_eval, best_cfg
         cfg = dict(zip(names, v))
-        r = evaluate(cfg)
         history.append((cfg, r))
         feas = r.feasible(constraints)
         score = r.area if feas else r.area + penalty * (
@@ -175,34 +198,88 @@ def bayes_design_opt(space: Sequence[Param],
         if feas and (best_eval is None or r.area < best_eval.area):
             best_eval, best_cfg = r, cfg
 
+    def run_batch(batch: list[tuple[tuple, np.ndarray]]):
+        if not batch:
+            return
+        results = eval_many([dict(zip(names, v)) for v, _ in batch])
+        for (v, u), r in zip(batch, results):
+            commit(v, u, r)
+
+    def admit(v: tuple) -> np.ndarray | None:
+        """Dedup + dominance gate, applied per candidate before batching."""
+        nonlocal pruned
+        if v in seen:
+            return None
+        u = to_unit(v)
+        if pruned_by_dominance(u):
+            pruned += 1
+            return None
+        seen.add(v)
+        return u
+
+    # ---- init: random configs, evaluated in batch_size chunks ------------
+    pending: list[tuple[tuple, np.ndarray]] = []
     for _ in range(n_init):
-        run(sample())
+        v = sample()
+        u = admit(v)
+        if u is not None:
+            pending.append((v, u))
+        if len(pending) >= batch_size:
+            run_batch(pending)
+            pending = []
+    run_batch(pending)
 
     gp = _GP()
     step = len(history)
     while step < iter_max_step:
-        if len(X) >= 2:
-            gp.fit(np.stack(X), np.array(y))
-            cands = [sample() for _ in range(n_candidates)]
-            cands = [c for c in cands if c not in seen]
-            if not cands:
-                break
-            U = np.stack([to_unit(c) for c in cands])
+        if len(X) < 2:
+            v = sample()
+            u = admit(v)
+            if u is not None:
+                run_batch([(v, u)])
+            step += 1  # legacy accounting: a dud sample still burns a step
+            continue
+        q = min(batch_size, iter_max_step - step)
+        cands = [sample() for _ in range(n_candidates)]
+        cands = [c for c in cands if c not in seen]
+        if not cands:
+            break
+        U = np.stack([to_unit(c) for c in cands])
+        gp.fit(np.stack(X), np.array(y))
+        # constant-liar q-EI: after each pick, refit pretending the pick
+        # already achieved the incumbent, so EI moves the next pick elsewhere
+        Xv, yv = list(X), list(y)
+        taken: set[int] = set()
+        counted: set[int] = set()   # dominated candidates counted this round
+        batch: list[tuple[tuple, np.ndarray]] = []
+        for j in range(q):
+            if j > 0:
+                gp.fit(np.stack(Xv), np.array(yv))
             mu, var = gp.posterior(U)
-            ei = _ei(mu, var, min(y))
-            order = np.argsort(-ei)
-            picked = None
-            for i in order:
-                if not pruned_by_dominance(U[i]):
-                    picked = cands[i]
-                    break
-                pruned += 1
-            if picked is None:
+            ei = _ei(mu, var, min(yv))
+            sel = None
+            for i in np.argsort(-ei):
+                if i in taken or cands[i] in seen:
+                    # `seen` catches duplicate tuples sampled at two indices
+                    continue
+                if pruned_by_dominance(U[i]):
+                    if i not in counted:
+                        counted.add(i)
+                        pruned += 1
+                    continue
+                sel = int(i)
                 break
-            run(picked)
-        else:
-            run(sample())
-        step += 1
+            if sel is None:
+                break
+            taken.add(sel)
+            seen.add(cands[sel])
+            batch.append((cands[sel], U[sel]))
+            Xv.append(U[sel])
+            yv.append(min(yv))  # the lie: assume the incumbent value
+        if not batch:
+            break
+        run_batch(batch)
+        step += len(batch)
 
     return DseResult(best=best_cfg, best_eval=best_eval, history=history,
                      pruned=pruned, evaluations=len(history))

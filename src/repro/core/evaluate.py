@@ -3,20 +3,90 @@
 These drive the paper's experiments: layer sensitivity (Fig. 5/6), strategy
 comparison (Fig. 7), S_TH x (IB,NB) surfaces (Fig. 10), Q_scale (Fig. 11),
 and the Bayesian DSE's accuracy oracle.
+
+The oracle is vectorized two ways (see docs/dse.md):
+
+  * ``CnnOracle.accuracy`` stacks its ``n_rep`` fault draws onto a vmap axis
+    of one jitted ``apply_cnn`` executable.  The executable cache is jit's
+    own, keyed on the policy *treedef* (``ber`` is the only pytree leaf, so
+    the treedef carries all static structure): structurally-identical
+    policies never re-jit.
+  * ``CnnOracle.accuracy_batch`` additionally puts *candidates* on the same
+    axis.  Table-I knobs that only change numbers, not control flow —
+    ``ib_th`` / ``nb_th`` / ``q_scale`` (traced through ``FTCtx.dyn``) and
+    ``s_th`` / ``s_policy`` (per-candidate importance masks) — are moved off
+    the treedef onto the batch axis, so every candidate that shares the
+    canonical structure (recompute / TMR flags) shares one executable.  The
+    datapath is integer, so batched results are bit-identical to the looped
+    ``n_rep`` path.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.importance import ImportanceResult, neuron_importance
 from repro.ft import ProtectionPolicy, as_policy, get_policy
 from repro.data.pipeline import vision_batch
 from repro.models.cnn import CNNConfig, accuracy, apply_cnn, xent_loss
 from repro.models.common import FTCtx
+
+
+# ---------------------------------------------------------------------------
+# Vmapped accuracy executables.  Both are jitted module-level functions whose
+# cache key is (cfg, policy treedef, protected set) plus the operand shapes —
+# i.e. the executable cache the batched DSE amortizes its compiles against.
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("cfg", "treedef", "protected"))
+def _acc_under_fault(params, cfg, imgs, labels, bers, keys, masks, *,
+                     treedef, protected):
+    """(R,) accuracies: one fault draw per (ber, key) lane, masks shared."""
+    def one(ber, key):
+        pol = jax.tree_util.tree_unflatten(treedef, (ber,))
+        ftc = FTCtx(pol, key, masks,
+                    None if protected is None else set(protected))
+        return accuracy(apply_cnn(params, cfg, imgs, ftc=ftc), labels)
+    return jax.vmap(one)(bers, keys)
+
+
+@partial(jax.jit, static_argnames=("cfg", "treedef", "protected"))
+def _acc_under_fault_dyn(params, cfg, imgs, labels, bers, keys, ibs, nbs,
+                         qss, masks, *, treedef, protected):
+    """(B,) accuracies with the numeric knobs (and masks) on the vmap axis.
+
+    ``treedef`` is the *canonical* policy structure (see ``_batch_canon``);
+    every candidate sharing it rides the same executable regardless of its
+    ib_th / nb_th / q_scale / s_th values.
+    """
+    def one(ber, key, ib, nb, qs, m):
+        pol = jax.tree_util.tree_unflatten(treedef, (ber,))
+        ftc = FTCtx(pol, key, m,
+                    None if protected is None else set(protected),
+                    dyn={"ib_th": ib, "nb_th": nb, "q_scale": qs})
+        return accuracy(apply_cnn(params, cfg, imgs, ftc=ftc), labels)
+    return jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0))(
+        bers, keys, ibs, nbs, qss, masks)
+
+
+def _batch_canon(pol: ProtectionPolicy) -> ProtectionPolicy:
+    """Canonical structure of a policy for cross-candidate batching: keep the
+    fields that change the traced program (recompute / TMR flags,
+    weight_faults), zero the ones that ride the vmap axis or never enter the
+    accuracy datapath (dot_size / data_reuse / pe_policy feed the area & perf
+    oracles only)."""
+    from repro.ft.policy import AlgorithmLayer, ArchLayer, CircuitLayer
+    return ProtectionPolicy(
+        name="",
+        algorithm=AlgorithmLayer(),
+        arch=ArchLayer(recompute=pol.arch.recompute,
+                       whole_layer_tmr=pol.arch.whole_layer_tmr,
+                       temporal=pol.arch.temporal),
+        circuit=CircuitLayer(),
+        ber=0.0, weight_faults=pol.weight_faults, seed=0)
 
 
 @dataclasses.dataclass
@@ -55,10 +125,39 @@ class CnnOracle:
         return self.importance().select(s_th, policy)
 
     # ---- accuracy under fault ------------------------------------------
+    def _rep_keys(self, seed: int) -> list[jax.Array]:
+        return [jax.random.PRNGKey(seed * 97 + r) for r in range(self.n_rep)]
+
     def accuracy(self, ft: ProtectionPolicy | None, masks=None,
                  protected_layers=None, seed: int = 0) -> float:
         """`ft`: a ProtectionPolicy, a registered policy name, a legacy
-        FTConfig, or None for the clean model."""
+        FTConfig, or None for the clean model.
+
+        The ``n_rep`` fault draws run as one vmapped executable (cached on
+        the policy treedef); bit-identical to ``_accuracy_looped``."""
+        pol = as_policy(ft)
+        if pol is None or pol.ber == 0:
+            logits = apply_cnn(self.params, self.cfg, self._imgs)
+            return float(accuracy(logits, self._labels))
+        if masks is None and pol.uses_importance:
+            masks = self.masks(pol.algorithm.s_th, pol.algorithm.s_policy)
+        _, treedef = jax.tree_util.tree_flatten(pol)
+        bers = jnp.full((self.n_rep,), pol.ber, jnp.float32)
+        keys = jnp.stack(self._rep_keys(seed))
+        masks_j = ({} if masks is None else
+                   {k: jnp.asarray(v) for k, v in masks.items()})
+        protected = (None if protected_layers is None
+                     else frozenset(protected_layers))
+        accs = _acc_under_fault(self.params, self.cfg, self._imgs,
+                                self._labels, bers, keys, masks_j,
+                                treedef=treedef, protected=protected)
+        accs = [float(a) for a in np.asarray(accs)]
+        return sum(accs) / len(accs)
+
+    def _accuracy_looped(self, ft, masks=None, protected_layers=None,
+                         seed: int = 0) -> float:
+        """Reference implementation: one forward per fault draw.  Kept as the
+        ground truth the vectorized paths are tested bit-identical against."""
         pol = as_policy(ft)
         if pol is None or pol.ber == 0:
             logits = apply_cnn(self.params, self.cfg, self._imgs)
@@ -66,12 +165,66 @@ class CnnOracle:
         accs = []
         if masks is None and pol.uses_importance:
             masks = self.masks(pol.algorithm.s_th, pol.algorithm.s_policy)
-        for r in range(self.n_rep):
-            ftc = FTCtx(pol, jax.random.PRNGKey(seed * 97 + r), masks,
-                        protected_layers)
+        for key in self._rep_keys(seed):
+            ftc = FTCtx(pol, key, masks, protected_layers)
             logits = apply_cnn(self.params, self.cfg, self._imgs, ftc=ftc)
             accs.append(float(accuracy(logits, self._labels)))
         return sum(accs) / len(accs)
+
+    def accuracy_batch(self, fts, protected_layers=None,
+                       seed: int = 0) -> list[float]:
+        """Accuracy under fault for a batch of candidate policies.
+
+        Candidates are grouped by canonical structure (``_batch_canon``);
+        each group's ``len(group) * n_rep`` (candidate x fault-draw) lanes
+        run as one vmapped executable with ``ib_th`` / ``nb_th`` /
+        ``q_scale`` traced and per-candidate importance masks stacked on the
+        same axis.  Per-candidate results are bit-identical to
+        ``accuracy``."""
+        pols = [as_policy(f) for f in fts]
+        out: list[float | None] = [None] * len(pols)
+        clean = [i for i, p in enumerate(pols) if p is None or p.ber == 0]
+        if clean:
+            v = self.accuracy(None)
+            for i in clean:
+                out[i] = v
+        groups: dict = {}
+        for i, p in enumerate(pols):
+            if out[i] is None:
+                canon = _batch_canon(p)
+                key = jax.tree_util.tree_structure(canon)
+                groups.setdefault(key, []).append(i)
+        protected = (None if protected_layers is None
+                     else frozenset(protected_layers))
+        R = self.n_rep
+        rep_keys = np.stack([np.asarray(k) for k in self._rep_keys(seed)])
+        for treedef, idxs in groups.items():
+            grp = [pols[i] for i in idxs]
+            q = len(grp)
+            bers = jnp.asarray(np.repeat([p.ber for p in grp], R), jnp.float32)
+            keys = jnp.asarray(np.tile(rep_keys, (q, 1)))
+            ibs = jnp.asarray(np.repeat([p.circuit.ib_th for p in grp], R),
+                              jnp.int32)
+            nbs = jnp.asarray(np.repeat([p.circuit.nb_th for p in grp], R),
+                              jnp.int32)
+            qss = jnp.asarray(np.repeat([p.algorithm.q_scale for p in grp],
+                                        R), jnp.int32)
+            masks_j: dict = {}
+            if grp[0].uses_importance:
+                per_cand = [self.masks(p.algorithm.s_th, p.algorithm.s_policy)
+                            for p in grp]
+                masks_j = {site: jnp.asarray(np.repeat(
+                               np.stack([m[site] for m in per_cand]), R,
+                               axis=0))
+                           for site in per_cand[0]}
+            accs = _acc_under_fault_dyn(
+                self.params, self.cfg, self._imgs, self._labels, bers, keys,
+                ibs, nbs, qss, masks_j, treedef=treedef, protected=protected)
+            accs = np.asarray(accs).reshape(q, R)
+            for j, i in enumerate(idxs):
+                reps = [float(a) for a in accs[j]]
+                out[i] = sum(reps) / len(reps)
+        return out  # type: ignore[return-value]
 
     def layer_names(self) -> list[str]:
         drop = {"head"}
@@ -79,8 +232,15 @@ class CnnOracle:
 
     # ---- Fig. 5: per-layer sensitivity ---------------------------------
     def layer_sensitivity(self, ber: float, seed: int = 0) -> dict[str, float]:
-        """Accuracy gain from fully protecting one layer vs none protected."""
-        key = (ber, seed)
+        """Accuracy gain from fully protecting one layer vs none protected.
+
+        Results are memoized in ``_sens_cache`` keyed on everything the
+        measurement depends on — ``(ber, seed, n_rep)``.  (``n_rep`` is
+        mutable oracle state; keying on it keeps a cached entry from being
+        served after the fault-draw count changes.)  ``protected_layers`` is
+        *not* part of the key: every entry is computed with the one-layer
+        protection sets this method itself chooses."""
+        key = (ber, seed, self.n_rep)
         if key in self._sens_cache:
             return self._sens_cache[key]
         base_ft = get_policy("arch", ber=ber)

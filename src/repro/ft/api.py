@@ -46,7 +46,8 @@ def protect_linear(key: jax.Array, x: jax.Array, w: jax.Array,
                    layer_protected: bool = True,
                    backend: str = "reference",
                    t: int | None = None,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True,
+                   dyn=None) -> jax.Array:
     """Fault-tolerant linear: float in/out, faulty quantized DLA inside.
 
     Args:
@@ -59,11 +60,22 @@ def protect_linear(key: jax.Array, x: jax.Array, w: jax.Array,
       backend: "reference" | "pallas".
       t: truncation LSB for the pallas backend (calibrated from x/w if None).
       interpret: run the pallas kernel in interpret mode (CPU).
+      dyn: optional mapping of *traced* overrides for the policy's numeric
+        protection knobs (``ib_th`` / ``nb_th`` / ``q_scale``).  The static
+        values in ``policy`` are metadata the executable specializes on; a
+        ``dyn`` entry moves that knob onto the trace so a batch of candidate
+        designs with different knob values shares one compiled executable
+        (the batched DSE oracle — see ``repro.core.evaluate``).  Reference
+        backend only.
     Returns (..., N) float32.
     """
     if backend == "reference":
         return _protect_reference(key, x, w, policy, important,
-                                  layer_protected)
+                                  layer_protected, dyn)
+    if dyn:
+        raise ValueError("dyn knob overrides are only supported by "
+                         "backend='reference' (the pallas kernel takes its "
+                         "protection knobs statically)")
     if backend == "pallas":
         return _protect_pallas(key, x, w, policy, important,
                                layer_protected=layer_protected, t=t,
@@ -75,31 +87,38 @@ def protect_linear(key: jax.Array, x: jax.Array, w: jax.Array,
 # ------------------------------------------------------------ reference ----
 @partial(jax.jit, static_argnames=("layer_protected",))
 def _protect_reference(key, x, w, policy: ProtectionPolicy, important,
-                       layer_protected: bool):
+                       layer_protected: bool, dyn=None):
     """The former ``ft_linear`` datapath, structure-dispatched on the policy.
 
     Every fault-injection site executes unconditionally with the (possibly
     traced) BER — at BER 0 each injection is the identity, so the output is
     bit-identical to the branch-skipping legacy code while remaining
-    vmap-able over a BER axis.
+    vmap-able over a BER axis.  ``dyn`` optionally replaces the static
+    ``ib_th`` / ``nb_th`` / ``q_scale`` metadata with traced values so those
+    knobs can ride the same vmap axis (integer datapath => the result stays
+    bit-identical to the static trace of the same values).
     """
     orig_shape = x.shape
     x2 = x.reshape(-1, orig_shape[-1])
     kw, ka, kd = jax.random.split(key, 3)
     n = w.shape[1]
     alg, arch, circ = policy.algorithm, policy.arch, policy.circuit
+    dyn = dyn or {}
+    ib_th = dyn.get("ib_th", circ.ib_th)
+    nb_th = dyn.get("nb_th", circ.nb_th)
+    q_scale = dyn.get("q_scale", alg.q_scale)
 
     xq, sx = Q.quantize(x2)
     wq, sw = Q.quantize(w)
     wq_f = (faults.inject_weight_faults(kw, wq, policy.ber)
             if policy.weight_faults else wq)
     acc = Q.saturate(jnp.matmul(xq, wq_f, preferred_element_type=jnp.int32))
-    t = Q.choose_trunc_lsb(jnp.max(jnp.abs(acc)), q_scale=alg.q_scale)
+    t = Q.choose_trunc_lsb(jnp.max(jnp.abs(acc)), q_scale=q_scale)
     yq = Q.truncate_acc(acc, t)
 
     # circuit layer: per-channel protected high bits
     imp = jnp.zeros((n,), bool) if important is None else important
-    protect = jnp.where(imp, circ.ib_th, circ.nb_th).astype(jnp.int32)
+    protect = jnp.where(imp, ib_th, nb_th).astype(jnp.int32)
     if arch.whole_layer_tmr and layer_protected:
         # spatial/temporal TMR of the whole layer: every bit voted
         protect = jnp.full((n,), Q.OUT_BITS, jnp.int32)
@@ -114,7 +133,7 @@ def _protect_reference(key, x, w, policy: ProtectionPolicy, important,
         yq_d = Q.truncate_acc(acc_d, t)
         yq_d = faults.inject_output_faults(
             kd, yq_d, policy.ber,
-            protect_top=jnp.full((n,), circ.ib_th, jnp.int32))
+            protect_top=jnp.broadcast_to(jnp.asarray(ib_th, jnp.int32), (n,)))
         yq_f = jnp.where(important[None, :], yq_d, yq_f)
 
     scale = sx * sw * (2.0 ** t.astype(jnp.float32))

@@ -89,10 +89,16 @@ class FTCtx:
     pallas kernel takes the truncation LSB statically, so under jit supply
     ``t`` — one int for all sites or a per-site {name: int} calibration
     table (repro.ft.calibrate_t) — and ``interpret=False`` to run the
-    compiled kernel on TPU."""
+    compiled kernel on TPU.
+
+    ``dyn`` optionally carries traced overrides of the policy's numeric
+    protection knobs ({"ib_th": ..., "nb_th": ..., "q_scale": ...}) so a
+    vmap axis of candidate designs shares one executable — the batched DSE
+    oracle path (reference backend only; see ``repro.core.evaluate``)."""
 
     def __init__(self, ft, key, masks=None, protected_layers=None,
-                 backend: str = "reference", t=None, interpret: bool = True):
+                 backend: str = "reference", t=None, interpret: bool = True,
+                 dyn=None):
         from repro.ft import as_policy
         self.ft = as_policy(ft)
         self.key = key
@@ -101,6 +107,7 @@ class FTCtx:
         self.backend = backend
         self.t = t
         self.interpret = interpret
+        self.dyn = dyn
 
     def site_key(self, name: str):
         import zlib
@@ -140,7 +147,8 @@ def linear(x: jax.Array, w: jax.Array, b=None, *,
                            w2, ftc.ft,
                            important=None if imp is None else jnp.asarray(imp),
                            layer_protected=prot, backend=ftc.backend,
-                           t=ftc.site_t(name), interpret=ftc.interpret)
+                           t=ftc.site_t(name), interpret=ftc.interpret,
+                           dyn=ftc.dyn)
         y = y.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
     if b is not None:
         y = y + b.astype(y.dtype)

@@ -1,0 +1,186 @@
+"""Batched DSE engine: q-EI proposal loop, batch oracles, vmapped accuracy.
+
+Covers the ISSUE-3 guarantees: batch_size=1 is the exact sequential
+algorithm, batch_size>1 stays feasible/deduped/pruned on a fixed seed, the
+numpy-broadcast area/perf/IO batch oracles match the scalar models, and the
+vmapped fault-injection oracle is bit-identical to the looped n_rep path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import area as A
+from repro.core import bayesopt as B
+from repro.core import perfmodel as P
+from repro.core.pipeline import (batch_area_overhead, batch_perf_bw,
+                                 _policy_from_cfg, optimize)
+from repro.ft import get_policy
+
+
+def synthetic_eval(cfg):
+    prot = cfg["s_th"] * 4 + cfg["ib_th"] * 0.08 + cfg["nb_th"] * 0.3
+    area = prot * (0.5 if cfg["pe_policy"] == "configurable" else 1.0)
+    area += cfg["dot_size"] / 512
+    acc = min(0.70 + prot * 0.25, 0.78)
+    perf = 0.0 if cfg["dot_size"] >= 16 else 0.2
+    bw = cfg["s_th"]
+    return B.EvalResult(area=area, acc=acc, perf_loss=perf, bw_loss=bw)
+
+
+def strict_eval(cfg):
+    prot = cfg["s_th"] * 4 + cfg["ib_th"] * 0.08 + cfg["nb_th"] * 0.3
+    return B.EvalResult(area=prot, acc=0.70 + prot * 0.08,
+                        perf_loss=0.0, bw_loss=0.0)
+
+
+# ---------------------------------------------------------------- BO loop --
+def test_batch_size_one_is_sequential():
+    """Supplying evaluate_batch must not change the sequential stream."""
+    cons = B.Constraints(acc_min=0.75)
+    plain = B.bayes_design_opt(B.table1_space(), synthetic_eval, cons,
+                               iter_max_step=48, seed=0)
+    with_batch_fn = B.bayes_design_opt(
+        B.table1_space(), synthetic_eval, cons, iter_max_step=48, seed=0,
+        batch_size=1,
+        evaluate_batch=lambda cfgs: [synthetic_eval(c) for c in cfgs])
+    assert [c for c, _ in plain.history] == [c for c, _ in
+                                             with_batch_fn.history]
+    assert plain.best == with_batch_fn.best
+    assert plain.pruned == with_batch_fn.pruned
+
+
+def test_batched_feasible_no_worse_than_sequential_fixed_seed():
+    cons = B.Constraints(acc_min=0.75)
+    seq = B.bayes_design_opt(B.table1_space(), synthetic_eval, cons,
+                             iter_max_step=48, seed=3)
+    bat = B.bayes_design_opt(B.table1_space(), synthetic_eval, cons,
+                             iter_max_step=48, seed=3, batch_size=4)
+    assert bat.best is not None
+    assert bat.best_eval.feasible(cons)
+    assert bat.best_eval.area <= seq.best_eval.area + 1e-12
+
+
+def test_batch_dedup_and_pruning_honored():
+    cons = B.Constraints(acc_min=0.80, perf_max=0.5, bw_max=0.5)
+    batches = []
+
+    def eval_batch(cfgs):
+        batches.append([tuple(sorted((k, str(v)) for k, v in c.items()))
+                        for c in cfgs])
+        return [strict_eval(c) for c in cfgs]
+
+    total_pruned = 0
+    for seed in range(4):
+        res = B.bayes_design_opt(B.table1_space(), strict_eval, cons,
+                                 iter_max_step=80, n_init=30,
+                                 n_candidates=512, seed=seed, batch_size=4,
+                                 evaluate_batch=eval_batch)
+        total_pruned += res.pruned
+        assert res.evaluations <= 80
+        evaluated = [tuple(sorted((k, str(v)) for k, v in c.items()))
+                     for c, _ in res.history]
+        assert len(evaluated) == len(set(evaluated))  # dedup across run
+    assert total_pruned > 0  # dominance pruning fires inside batched rounds
+    assert all(len(b) <= 4 for b in batches)
+    assert any(len(b) > 1 for b in batches)  # batching actually happened
+
+
+def test_evaluate_or_evaluate_batch_required():
+    with pytest.raises(ValueError):
+        B.bayes_design_opt(B.table1_space(), None, B.Constraints(acc_min=0.5))
+
+
+# ------------------------------------------------- batched analytic oracles
+def test_batch_oracles_match_scalar_models():
+    rng = np.random.default_rng(0)
+    space = B.table1_space()
+    cfgs = [{p.name: p.values[rng.integers(len(p.values))] for p in space}
+            for _ in range(25)]
+    pols = [_policy_from_cfg(c, 1e-3) for c in cfgs]
+    pols += [get_policy("arch", ber=1e-3), get_policy("alg", ber=1e-3),
+             get_policy("crt2", ber=1e-3), get_policy("base")]
+    layers = P.lm_layer_gemms(4, 256, 1024, 8, 32, 8, seq=128)
+    areas = batch_area_overhead(pols, 32)
+    perfs, bws = batch_perf_bw(pols, layers, 32)
+    for i, p in enumerate(pols):
+        ref_area = A.array_area(32, p.circuit.nb_th, p.algorithm.q_scale,
+                                p.circuit.pe_policy,
+                                dot_size=p.arch.dot_size,
+                                ib_th=p.circuit.ib_th)["overhead"]
+        dla = P.DlaConfig(array_dim=32, dot_size=p.arch.dot_size,
+                          data_reuse=p.arch.data_reuse)
+        ref_perf = P.perf_loss(layers, dla, p.perf_kind,
+                               s_th=p.algorithm.s_th)
+        ref_bw = P.io_bytes(layers, dla, p.perf_kind,
+                            s_th=p.algorithm.s_th)["extra_over_weights"]
+        assert np.isclose(areas[i], ref_area, rtol=1e-12)
+        assert np.isclose(perfs[i], ref_perf, rtol=1e-12)
+        assert np.isclose(bws[i], ref_bw, rtol=1e-12)
+
+
+def test_optimize_batched_pipeline():
+    """End-to-end driver with a cheap deterministic accuracy oracle."""
+    layers = P.lm_layer_gemms(2, 128, 512, 4, 32, 4, seq=64)
+
+    def fake_acc(pol):
+        prot = (pol.algorithm.s_th * 4 + pol.circuit.ib_th * 0.08
+                + pol.circuit.nb_th * 0.3)
+        return min(0.70 + prot * 0.25, 0.78)
+
+    calls = {"batched": 0}
+
+    def fake_acc_batch(pols):
+        calls["batched"] += len(pols)
+        return [fake_acc(p) for p in pols]
+
+    cons = B.Constraints(acc_min=0.75, perf_max=2.0, bw_max=2.0)
+    seq = optimize(fake_acc, layers, cons, 1e-3, iter_max_step=24, seed=1)
+    bat = optimize(fake_acc, layers, cons, 1e-3, iter_max_step=24, seed=1,
+                   batch_size=6, acc_oracle_batch=fake_acc_batch)
+    assert calls["batched"] > 0
+    assert (seq.policy is None) == (bat.policy is None)  # same feasibility
+    if bat.policy is not None:
+        assert bat.dse.best_eval.feasible(cons)
+
+
+# ----------------------------------------------------- vmapped CNN oracle --
+@pytest.fixture(scope="module")
+def tiny_oracle():
+    from repro.core.evaluate import CnnOracle
+    from repro.models.cnn import CNNConfig, train_cnn
+    cfg = CNNConfig(channels=(8,), hw=8)
+    params, _ = train_cnn(jax.random.PRNGKey(0), cfg, steps=60)
+    return CnnOracle(params, cfg, n_eval=96, n_rep=2, noise=0.8)
+
+
+POLICIES = [
+    get_policy("cl", ber=8e-3, s_th=0.1, ib_th=3, nb_th=1, q_scale=4),
+    get_policy("cl", ber=4e-3, s_th=0.05, ib_th=2, nb_th=2, q_scale=7),
+    get_policy("crt2", ber=4e-3),
+]
+
+
+def test_vmapped_accuracy_bit_identical_to_looped(tiny_oracle):
+    for pol in POLICIES:
+        looped = tiny_oracle._accuracy_looped(pol)
+        vmapped = tiny_oracle.accuracy(pol)
+        assert vmapped == looped  # exact: integer datapath under vmap
+
+
+def test_accuracy_batch_bit_identical_to_single(tiny_oracle):
+    batched = tiny_oracle.accuracy_batch(POLICIES)
+    singles = [tiny_oracle.accuracy(p) for p in POLICIES]
+    assert batched == singles  # exact, including cross-candidate vmap lanes
+
+
+def test_accuracy_batch_handles_clean_and_mixed(tiny_oracle):
+    pols = [None, POLICIES[0]]
+    batched = tiny_oracle.accuracy_batch(pols)
+    assert batched[0] == tiny_oracle.accuracy(None)
+    assert batched[1] == tiny_oracle.accuracy(POLICIES[0])
+
+
+def test_sens_cache_keyed_on_n_rep(tiny_oracle):
+    sens = tiny_oracle.layer_sensitivity(8e-3)
+    assert (8e-3, 0, tiny_oracle.n_rep) in tiny_oracle._sens_cache
+    assert sens == tiny_oracle.layer_sensitivity(8e-3)  # cache hit

@@ -1,0 +1,77 @@
+"""Execute the fenced ``python`` code blocks of markdown files.
+
+CI runs this over README.md and docs/*.md so the documentation can't rot:
+every ```` ```python ```` block must run (blocks within one file share a
+namespace, in order, like a REPL session).  Blocks fenced as
+```` ```python no-run ```` are illustrative only and are skipped.
+
+Usage: PYTHONPATH=src python tools/check_doc_snippets.py README.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+FENCE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+
+
+def blocks(text: str):
+    """Yield (start_line, info, args, source) per fenced code block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m and m.group(1):
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield start, m.group(1), m.group(2).strip(), "\n".join(body)
+        i += 1
+
+
+def check_file(path: str) -> tuple[int, int]:
+    """Run a file's python blocks in one shared namespace; returns
+    (ran, skipped).  Raises on the first failing block."""
+    with open(path) as f:
+        text = f.read()
+    ns: dict = {"__name__": f"doc_snippet:{path}"}
+    ran = skipped = 0
+    for line, info, args, src in blocks(text):
+        if info != "python":
+            continue
+        if "no-run" in args:
+            skipped += 1
+            continue
+        print(f"  {path}:{line} ({len(src.splitlines())} lines)", flush=True)
+        try:
+            exec(compile(src, f"{path}:{line}", "exec"), ns)
+        except Exception:
+            print(f"FAILED snippet at {path}:{line}:\n{src}", file=sys.stderr)
+            raise
+        ran += 1
+    return ran, skipped
+
+
+def main(paths: list[str]) -> int:
+    if not paths:
+        print("usage: check_doc_snippets.py FILE.md [FILE.md ...]",
+              file=sys.stderr)
+        return 2
+    total = skipped = 0
+    for path in paths:
+        print(f"checking {path}", flush=True)
+        r, s = check_file(path)
+        total += r
+        skipped += s
+    print(f"OK: {total} snippet(s) executed, {skipped} skipped (no-run)")
+    if total == 0:
+        print("error: no runnable snippets found", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
