@@ -5,7 +5,10 @@
 
 The serving engine takes a protection policy directly: every projection of
 prefill and decode then computes through the faulty quantized DLA path with
-that policy's cross-layer protection applied.
+that policy's cross-layer protection applied.  The decode loop is a single
+fused ``lax.scan`` executable (2 host dispatches per generation — see
+docs/serving.md); the final section serves a small request queue through
+the continuous-batching scheduler with per-request fault streams.
 """
 import os
 import sys
@@ -48,6 +51,26 @@ def main():
     print("\n(the cross-layer 'cl' policy additionally recomputes "
           "important channels on the DPPU — feed Algorithm-1 masks through "
           "FTCtx(masks=...); see examples/crosslayer_dse.py)")
+
+    # Continuous batching: a queue of requests through a fixed slot pool,
+    # each with its own fault-key stream (alone or crowded, a request's
+    # generation is bit-identical — per-request reliability accounting).
+    from repro.serve.scheduler import Request, Scheduler, SchedulerConfig
+    sched = Scheduler(model, params,
+                      SchedulerConfig(max_batch=2, buckets=(8, 16),
+                                      max_new_tokens=8, decode_chunk=4),
+                      policy=ft.get_policy("crt3", ber=ber,
+                                           weight_faults=False))
+    reqs = [Request(rid=i, tokens=[int(t) for t in np.asarray(
+                prompts["tokens"][i % 2][:8 + 4 * (i % 2)])],
+                    max_new_tokens=8) for i in range(4)]
+    done = sched.run(reqs)
+    for i in sorted(done):
+        r = done[i]
+        print(f"request {i}: {r.generated} ({r.finish_reason}; "
+              f"{len(r.generated)} tokens)")
+    print(f"scheduler roundtrips: {sched.stats.roundtrips} for "
+          f"{sched.stats.tokens} tokens across {len(reqs)} requests")
 
 
 if __name__ == "__main__":

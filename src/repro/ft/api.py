@@ -51,6 +51,12 @@ def protect_linear(key: jax.Array, x: jax.Array, w: jax.Array,
     """Fault-tolerant linear: float in/out, faulty quantized DLA inside.
 
     Args:
+      key: one PRNG key, or an (M, 2) batch of keys — one per row of the
+        flattened x — for *per-row* independent fault streams (and per-row
+        quantization scales), so a serving batch's reliability accounting
+        stays per-request.  Per-row mode is reference-backend only and
+        requires ``policy.weight_faults=False`` (weights are shared across
+        rows, so per-row weight faults cannot be independent).
       x: (..., K) activations.  w: (K, N) weights.
       policy: a :class:`ProtectionPolicy` (see ``repro.ft.get_policy``).
       important: (N,) bool mask of important output channels (Algorithm 1);
@@ -72,6 +78,9 @@ def protect_linear(key: jax.Array, x: jax.Array, w: jax.Array,
     if backend == "reference":
         return _protect_reference(key, x, w, policy, important,
                                   layer_protected, dyn)
+    if getattr(key, "ndim", 1) == 2:
+        raise ValueError("per-row key batches are only supported by "
+                         "backend='reference'")
     if dyn:
         raise ValueError("dyn knob overrides are only supported by "
                          "backend='reference' (the pallas kernel takes its "
@@ -97,10 +106,27 @@ def _protect_reference(key, x, w, policy: ProtectionPolicy, important,
     ``ib_th`` / ``nb_th`` / ``q_scale`` metadata with traced values so those
     knobs can ride the same vmap axis (integer datapath => the result stays
     bit-identical to the static trace of the same values).
+
+    An (M, 2) ``key`` batch switches to *per-row* mode: each row gets its
+    own activation-quantization scale, truncation LSB and fault draws, so
+    row b's output is a function of row b's input and key only — batch
+    composition cannot perturb another request's fault stream (the
+    continuous-batching scheduler's reliability contract).
     """
     orig_shape = x.shape
     x2 = x.reshape(-1, orig_shape[-1])
-    kw, ka, kd = jax.random.split(key, 3)
+    per_row = getattr(key, "ndim", 1) == 2
+    if per_row:
+        if policy.weight_faults:
+            raise ValueError(
+                "per-row key batches need policy.weight_faults=False: "
+                "weights are shared across rows, so per-row weight-fault "
+                "streams cannot be independent (tune(weight_faults=False) "
+                "models the DLA's ECC-protected weight SRAM)")
+        ks = jax.vmap(lambda k: jax.random.split(k, 3))(key)   # (M, 3, 2)
+        kw, ka, kd = ks[:, 0], ks[:, 1], ks[:, 2]
+    else:
+        kw, ka, kd = jax.random.split(key, 3)
     n = w.shape[1]
     alg, arch, circ = policy.algorithm, policy.arch, policy.circuit
     dyn = dyn or {}
@@ -108,13 +134,22 @@ def _protect_reference(key, x, w, policy: ProtectionPolicy, important,
     nb_th = dyn.get("nb_th", circ.nb_th)
     q_scale = dyn.get("q_scale", alg.q_scale)
 
-    xq, sx = Q.quantize(x2)
+    xq, sx = Q.quantize(x2, axis=1 if per_row else None)
     wq, sw = Q.quantize(w)
     wq_f = (faults.inject_weight_faults(kw, wq, policy.ber)
             if policy.weight_faults else wq)
     acc = Q.saturate(jnp.matmul(xq, wq_f, preferred_element_type=jnp.int32))
-    t = Q.choose_trunc_lsb(jnp.max(jnp.abs(acc)), q_scale=q_scale)
+    absmax = (jnp.max(jnp.abs(acc), axis=1, keepdims=True) if per_row
+              else jnp.max(jnp.abs(acc)))
+    t = Q.choose_trunc_lsb(absmax, q_scale=q_scale)
     yq = Q.truncate_acc(acc, t)
+
+    def inject(keys, yq, protect):
+        if per_row:   # independent per-row draws: (M, 2) keys over (M, N)
+            return jax.vmap(lambda k, y: faults.inject_output_faults(
+                k, y, policy.ber, protect_top=protect))(keys, yq)
+        return faults.inject_output_faults(keys, yq, policy.ber,
+                                           protect_top=protect)
 
     # circuit layer: per-channel protected high bits
     imp = jnp.zeros((n,), bool) if important is None else important
@@ -122,8 +157,7 @@ def _protect_reference(key, x, w, policy: ProtectionPolicy, important,
     if arch.whole_layer_tmr and layer_protected:
         # spatial/temporal TMR of the whole layer: every bit voted
         protect = jnp.full((n,), Q.OUT_BITS, jnp.int32)
-    yq_f = faults.inject_output_faults(ka, yq, policy.ber,
-                                       protect_top=protect)
+    yq_f = inject(ka, yq, protect)
 
     if arch.recompute and important is not None:
         # architecture layer: DPPU recomputes important channels on its own
@@ -131,9 +165,8 @@ def _protect_reference(key, x, w, policy: ProtectionPolicy, important,
         acc_d = Q.saturate(jnp.matmul(xq, wq,
                                       preferred_element_type=jnp.int32))
         yq_d = Q.truncate_acc(acc_d, t)
-        yq_d = faults.inject_output_faults(
-            kd, yq_d, policy.ber,
-            protect_top=jnp.broadcast_to(jnp.asarray(ib_th, jnp.int32), (n,)))
+        yq_d = inject(kd, yq_d,
+                      jnp.broadcast_to(jnp.asarray(ib_th, jnp.int32), (n,)))
         yq_f = jnp.where(important[None, :], yq_d, yq_f)
 
     scale = sx * sw * (2.0 ** t.astype(jnp.float32))

@@ -1,7 +1,8 @@
 """Serving launcher: batched generation with the production mesh.
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b [--smoke] \
-      [--batch 8] [--prompt-len 32] [--new 32]
+      [--batch 8] [--prompt-len 32] [--new 32] [--loop scan|python] \
+      [--policy crt3 --ber 1e-4]
 """
 from __future__ import annotations
 
@@ -16,6 +17,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--loop", choices=("scan", "python"), default="scan",
+                    help="fused lax.scan decode loop (default) or the "
+                         "per-token dispatch loop")
+    ap.add_argument("--policy", default=None,
+                    help="repro.ft registry policy name (e.g. crt3, cl)")
+    ap.add_argument("--ber", type=float, default=1e-4)
     args = ap.parse_args()
 
     import jax
@@ -31,9 +38,15 @@ def main():
     mesh = (make_local_mesh() if args.smoke
             else make_production_mesh())
     params = model.init(jax.random.PRNGKey(0))
+    policy = None
+    if args.policy:
+        from repro import ft
+        policy = ft.get_policy(args.policy, ber=args.ber)
     engine = Engine(model, params, mesh=None if args.smoke else mesh,
                     cfg=ServeConfig(max_new_tokens=args.new,
-                                    temperature=args.temperature))
+                                    temperature=args.temperature,
+                                    loop=args.loop),
+                    policy=policy)
     batch = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)}
     if cfg.frontend == "vision":
@@ -43,7 +56,8 @@ def main():
         batch["frames"] = jnp.zeros(
             (args.batch, args.prompt_len, cfg.d_model), jnp.bfloat16)
     out = engine.generate(batch)
-    print(f"generated {out.shape[1]} tokens for {out.shape[0]} requests")
+    print(f"generated {out.shape[1]} tokens for {out.shape[0]} requests "
+          f"in {engine.stats.roundtrips} host roundtrips ({args.loop} loop)")
     print(out)
 
 

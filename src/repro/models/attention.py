@@ -166,14 +166,18 @@ def apply(p, x, *, cfg, run, kind, positions, probe=None, ftc=None,
 
     new_cache = cache
     if mode == "decode" and not cross:
-        # write this token into the (possibly rolling) cache
+        # write this token into the (possibly rolling) cache.  positions may
+        # differ per batch row (continuous batching: every slot serves its
+        # own request), so the write is a per-row dynamic update and the
+        # valid-length mask is per-row too.
         cap_len = cache["k"].shape[1]
-        pos = positions[0, 0]  # same for all batch rows
+        pos = positions[:, 0]                                        # (B,)
         slot = pos % cap_len if window else jnp.minimum(pos, cap_len - 1)
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+        upd = lambda c, u, s: jax.lax.dynamic_update_slice_in_dim(c, u, s, 0)
+        kc = jax.vmap(upd)(cache["k"], k, slot)
+        vc = jax.vmap(upd)(cache["v"], v, slot)
         new_cache = {"k": kc, "v": vc}
-        n_valid = jnp.minimum(pos + 1, cap_len)
+        n_valid = jnp.minimum(pos + 1, cap_len)                      # (B,)
         o = _decode_attn(q, kc, vc, n_valid, cap=cfg.attn_softcap)
     elif mode == "decode" and cross:
         o = _decode_attn(q, cache["ck"], cache["cv"], cache["ck"].shape[1],
@@ -192,13 +196,15 @@ def apply(p, x, *, cfg, run, kind, positions, probe=None, ftc=None,
 
 
 def _decode_attn(q, kc, vc, n_valid, cap=0.0):
-    """One-token attention over a cache.  q: (B,1,H,Dh), kc: (B,C,KH,Dh)."""
+    """One-token attention over a cache.  q: (B,1,H,Dh), kc: (B,C,KH,Dh).
+    n_valid: scalar or per-row (B,) count of populated cache slots."""
     B, _, H, Dh = q.shape
     KH = kc.shape[2]
     G = H // KH
     qg = q.reshape(B, KH, G, Dh).astype(jnp.float32)
     s = jnp.einsum("bkgd,bckd->bkgc", qg, kc.astype(jnp.float32))
     s = softcap(s, cap)
+    n_valid = jnp.reshape(n_valid, (-1, 1))           # () -> (1,1); (B,)->(B,1)
     valid = jnp.arange(kc.shape[1])[None] < n_valid
     s = jnp.where(valid[:, None, None], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
@@ -224,7 +230,10 @@ def _build_cache(k, v, window):
 
 
 def init_cache(cfg, kind, batch, cap_len, dtype):
+    # rolling caches are always window-sized: position p lives at slot
+    # p % window (matching _build_cache and the decode write), so a shorter
+    # capacity would break the slot mapping
     window = cfg.window if kind == "L" else 0
-    C = min(window, cap_len) if window else cap_len
+    C = window if window else cap_len
     shp = (batch, C, cfg.n_kv_heads, cfg.d_head)
     return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}

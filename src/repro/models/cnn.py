@@ -116,9 +116,16 @@ def accuracy(logits, labels):
 
 
 def train_cnn(key, cfg: CNNConfig, steps: int = 300, batch: int = 64,
-              lr: float = 3e-3, data_seed: int = 99, noise: float = 0.4):
+              lr: float = 3e-3, data_seed: int = 99, noise: float = 1.6):
     """Quick SGD+momentum training on the procedural vision set; returns
-    (params, final train accuracy)."""
+    (params, final train accuracy).
+
+    ``noise=1.6`` puts the reduced benchmark at ~0.98 clean accuracy —
+    *off* the 1.0 ceiling.  At lower noise the template task is linearly
+    separable with such wide logit margins that soft errors almost never
+    flip an argmax, which hides the paper's fault-sensitivity phenomenology
+    entirely (see tests/test_cnn_crosslayer.py).  Keep this in sync with
+    ``repro.core.evaluate.CnnOracle.noise``."""
     from repro.data.pipeline import vision_batch
     params = init_cnn(key, cfg)
     mom = jax.tree.map(jnp.zeros_like, params)

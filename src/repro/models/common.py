@@ -94,7 +94,13 @@ class FTCtx:
     ``dyn`` optionally carries traced overrides of the policy's numeric
     protection knobs ({"ib_th": ..., "nb_th": ..., "q_scale": ...}) so a
     vmap axis of candidate designs shares one executable — the batched DSE
-    oracle path (reference backend only; see ``repro.core.evaluate``)."""
+    oracle path (reference backend only; see ``repro.core.evaluate``).
+
+    ``key`` may be a single PRNG key (one fault stream for the whole
+    forward) or a (B, 2) batch of keys — one *independent* stream per batch
+    row, so a serving batch keeps per-request fault accounting: row b's
+    draws (and its quantization scales) depend only on row b (reference
+    backend, weight_faults=False; see ``repro.serve.scheduler``)."""
 
     def __init__(self, ft, key, masks=None, protected_layers=None,
                  backend: str = "reference", t=None, interpret: bool = True,
@@ -111,7 +117,10 @@ class FTCtx:
 
     def site_key(self, name: str):
         import zlib
-        return jax.random.fold_in(self.key, zlib.crc32(name.encode()))
+        c = zlib.crc32(name.encode())
+        if getattr(self.key, "ndim", 1) == 2:      # (B, 2) per-row streams
+            return jax.vmap(lambda k: jax.random.fold_in(k, c))(self.key)
+        return jax.random.fold_in(self.key, c)
 
     def site_t(self, name: str):
         return self.t.get(name) if isinstance(self.t, dict) else self.t
@@ -142,7 +151,15 @@ def linear(x: jax.Array, w: jax.Array, b=None, *,
         imp = ftc.masks.get(name)
         prot = (ftc.protected_layers is None
                 or name.split("/")[0] in ftc.protected_layers)
-        y = protect_linear(ftc.site_key(name),
+        sk = ftc.site_key(name)
+        if getattr(sk, "ndim", 1) == 2:
+            # batched per-row streams: the FTCtx carries one key per batch
+            # row; x flattens to (B*S, K) row-major, so each row-key repeats
+            # over that row's S positions.
+            reps = max(x.size // x.shape[-1], 1) // sk.shape[0]
+            if reps != 1:
+                sk = jnp.repeat(sk, reps, axis=0)
+        y = protect_linear(sk,
                            x.astype(jnp.float32).reshape(-1, w.shape[0]),
                            w2, ftc.ft,
                            important=None if imp is None else jnp.asarray(imp),

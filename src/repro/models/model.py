@@ -42,10 +42,14 @@ class Model:
         return nll + aux, {"nll": nll, "aux": aux}
 
     # ------------------------------------------------------------ prefill --
-    def prefill(self, params, batch, max_len: int | None = None, ftc=None):
+    def prefill(self, params, batch, max_len: int | None = None, ftc=None,
+                last_index=None):
         """Forward over a prompt, building the KV/state caches.  `max_len`
         reserves decode headroom in full-attention caches.  `ftc` routes every
         projection through the fault-tolerant DLA path (repro.ft).
+        `last_index`: optional (B,) per-row index of the final *real* prompt
+        token — for right-padded (bucketed) prompts the returned logits are
+        taken there instead of at the last position.
         Returns (caches, last_token_logits)."""
         cfg, run = self.cfg, self.run
         x, _, _, enc_inp = T.assemble_inputs(params, cfg, batch)
@@ -58,17 +62,28 @@ class Model:
         if max_len is not None and caches is not None:
             S = x.shape[1]
             pad = max(max_len - S, 0)
+            kinds = T._layer_kinds(cfg)
 
             def grow(path, leaf):
-                # full-attention k/v caches have length S; rolling/state
-                # caches are shorter and keep their capacity; cross-attn
-                # caches are fixed to the encoder length.  Scan-stacked
-                # caches (seg*) carry the length on axis 2 (axis 0 = block
-                # stack, axis 1 = batch); unrolled ones on axis 1.
+                # full-attention k/v caches have length S and grow to
+                # max_len; rolling (window) and state caches keep their
+                # fixed capacity (a rolling cache's slot map is p % window
+                # — padding it would corrupt the wrap); cross-attn caches
+                # are fixed to the encoder length.  Scan-stacked caches
+                # (seg*) carry the length on axis 2 (axis 0 = block stack,
+                # axis 1 = batch); unrolled ones on axis 1.
                 names = [getattr(k, "key", None) for k in path]
                 if "cross" in names:
                     return leaf
-                axis = 2 if str(names[0]).startswith("seg") else 1
+                if str(names[0]).startswith("seg"):
+                    axis = 2
+                    pattern, _ = cfg.segments[int(str(names[0])[3:])]
+                    kind = pattern[int(str(names[1])[1:])]
+                else:
+                    axis = 1
+                    kind = kinds[int(str(names[0])[1:])]
+                if kind == "L" and cfg.window:
+                    return leaf
                 if (pad and leaf.ndim > axis and leaf.shape[axis] == S):
                     cfgpad = [(0, 0)] * leaf.ndim
                     cfgpad[axis] = (0, pad)
@@ -76,16 +91,20 @@ class Model:
                 return leaf
 
             caches = jax.tree_util.tree_map_with_path(grow, caches)
-        return caches, T.last_logits(params, cfg, h)
+        return caches, T.last_logits(params, cfg, h, index=last_index)
 
     # ------------------------------------------------------------- decode --
     def decode_step(self, params, caches, token, pos, ftc=None):
-        """One-token decode.  token: (B,) int32; pos: () int32 (position of
-        this token).  Returns (new_caches, logits (B, V))."""
+        """One-token decode.  token: (B,) int32; pos: () int32 shared by the
+        batch, or (B,) int32 per-row positions (continuous batching: each
+        slot serves a request at its own depth).  Returns (new_caches,
+        logits (B, V))."""
         cfg, run = self.cfg, self.run
         B = token.shape[0]
         x = T.embed_tokens(params, cfg, token[:, None])
-        positions = jnp.broadcast_to(pos, (B, 1))
+        pos = jnp.asarray(pos, jnp.int32)
+        positions = (pos.reshape(B, 1) if pos.ndim
+                     else jnp.broadcast_to(pos, (B, 1)))
         h, new_caches, _ = T.backbone(params, x, cfg=cfg, run=run,
                                       mode="decode", caches=caches,
                                       positions=positions, ftc=ftc)

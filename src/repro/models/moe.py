@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.common import activation, dense_init
 from repro.parallel import ctx as pctx
+from repro.parallel.compat import shard_map
 
 
 def init(key, cfg, dtype):
@@ -145,9 +146,9 @@ def apply(p, x, cfg, probe=None, ftc=None, name="moe"):
         wg_arg = jnp.zeros((), x.dtype)
     else:
         wg_arg = wg
-    y, lb = jax.shard_map(
+    y, lb = shard_map(
         lambda xs, rw, wi, wg_, wo: shard_fn(
             xs, rw, wi, None if wg is None else wg_, wo),
         mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)(x, p["router"], p["wi"], wg_arg, p["wo"])
+        check=False)(x, p["router"], p["wi"], wg_arg, p["wo"])
     return y, cfg.moe.aux_coef * lb.mean()

@@ -334,8 +334,12 @@ def chunked_xent(params, cfg, run, h, labels, mask):
     return tot / jnp.maximum(cnt, 1.0)
 
 
-def last_logits(params, cfg, h):
+def last_logits(params, cfg, h, index=None):
+    """Logits at the last position, or — for right-padded (bucketed)
+    prompts — at a per-row `index` (B,) of the final real token."""
     emb = params.get("unembed", params["embed"])
-    logits = jax.lax.dot_general(h[:, -1], emb, (((1,), (1,)), ((), ())),
+    hl = h[:, -1] if index is None else jnp.take_along_axis(
+        h, jnp.asarray(index, jnp.int32)[:, None, None], axis=1)[:, 0]
+    logits = jax.lax.dot_general(hl, emb, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
     return softcap(logits, cfg.logit_softcap)

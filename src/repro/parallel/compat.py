@@ -1,0 +1,25 @@
+"""jax-version compatibility for the parallel stack.
+
+``shard_map`` moved twice across the supported jax range: 0.4.x ships it at
+``jax.experimental.shard_map.shard_map`` with the replication check spelled
+``check_rep``; newer releases promote it to ``jax.shard_map`` and rename the
+knob ``check_vma``.  ``shard_map`` here resolves the import once and maps the
+single ``check`` kwarg onto whichever spelling the installed jax takes (the
+same style of gate as the AbstractMesh shim in tests/test_sharding_rules.py).
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):                    # jax >= 0.6
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:                                            # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = True):
+    """Version-portable ``shard_map`` (``check`` = check_rep / check_vma)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})

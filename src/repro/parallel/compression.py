@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.compat import shard_map
+
 
 def quantize_grad(g, ef=None):
     """int8-quantize g (+error feedback).  Returns (q, scale, new_ef)."""
@@ -43,8 +45,8 @@ def compressed_psum_test(key, n_dev: int = 8) -> float:
         out, _ = compressed_psum(gl[0], "d")
         return out[None]
 
-    out = jax.jit(jax.shard_map(shard_fn, mesh=mesh, in_specs=P("d"),
-                                out_specs=P("d")))(g)
+    out = jax.jit(shard_map(shard_fn, mesh=mesh, in_specs=P("d"),
+                            out_specs=P("d")))(g)
     exact = g.mean(0)
     err = float(jnp.linalg.norm(out[0] - exact) / jnp.linalg.norm(exact))
     return err

@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, ServeConfig, ServeStats  # noqa: F401
+from repro.serve.scheduler import (Request, SchedStats,  # noqa: F401
+                                   Scheduler, SchedulerConfig)

@@ -1,0 +1,302 @@
+"""Continuous-batching request scheduler on top of the scan-fused engine.
+
+A fixed pool of ``max_batch`` decode *slots* serves a queue of requests:
+
+  * **admit** — a free slot prefils the next queued request (prompt padded
+    up to a configured length *bucket*, so prefill compiles once per bucket,
+    not once per prompt length) and its caches are written into the slot's
+    row of the batched cache pytree;
+  * **decode** — all slots step together through a fused ``lax.scan`` chunk
+    of ``decode_chunk`` tokens (one host roundtrip per chunk, not per
+    token), with *per-row* positions (every slot sits at its own depth);
+  * **evict** — a request leaves its slot when it emits ``eos_id`` or hits
+    its ``max_new_tokens``; the slot is immediately re-admittable.
+
+Fault-tolerant serving keeps **per-request reliability accounting**: each
+request draws its faults from its own key stream ``fold_in(base, rid)``
+folded by its own token index, carried through the batch as an (B, 2) key
+array (``FTCtx`` per-row mode).  Row b's fault draws — and its quantization
+scales — depend only on request b, so evicting or admitting neighbours
+never perturbs another request's generation (reference backend;
+``policy.weight_faults`` must be False because weight SRAM is shared — the
+DLA models it as ECC-protected anyway).
+
+Exactness of bucket padding: prompts are right-padded; pad positions write
+cache slots *ahead* of the request's position, which decode overwrites
+token-by-token while the per-row valid mask hides the rest — bit-identical
+to an unpadded prefill.  Two structural limits follow: sliding-window
+layers need ``max(buckets) <= cfg.window`` (otherwise pads would evict real
+history from the rolling cache), and recurrent blocks (R/S) are rejected —
+their prefill state would integrate the pad tokens.  MoE models schedule
+fine, but expert-capacity competition couples rows (per-request streams
+stay independent; token *drops* may differ with batch composition).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: list                     # prompt token ids
+    max_new_tokens: int = 16
+    extras: dict | None = None       # e.g. {"patch_embeds": (P, D)} for VLMs
+    # filled by the scheduler:
+    generated: list = dataclasses.field(default_factory=list)
+    finish_reason: str | None = None   # "eos" | "length"
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int = 4               # concurrent decode slots
+    buckets: tuple = (8, 16)         # prompt lengths are padded up to these
+    max_new_tokens: int = 16         # per-request cap (cache headroom)
+    decode_chunk: int = 4            # fused scan steps per host roundtrip
+    temperature: float = 0.0
+    eos_id: int = -1                 # < 0: no EOS eviction
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SchedStats:
+    prefill_calls: int = 0
+    insert_calls: int = 0
+    chunk_calls: int = 0
+    tokens: int = 0
+
+    @property
+    def roundtrips(self) -> int:
+        return self.prefill_calls + self.insert_calls + self.chunk_calls
+
+
+class Scheduler:
+    def __init__(self, model, params, cfg: SchedulerConfig | None = None,
+                 policy=None, ft_backend: str = "reference", ft_t=None,
+                 ft_interpret: bool = True):
+        from repro.ft import as_policy
+        self.model, self.params = model, params
+        self.cfg = cfg or SchedulerConfig()
+        self.policy = as_policy(policy)
+        self.stats = SchedStats()
+
+        mcfg = model.cfg
+        kinds = set(T._layer_kinds(mcfg))
+        if kinds & {"R", "S"} or mcfg.enc_dec:
+            raise ValueError(
+                "the bucketed scheduler supports attention families only: "
+                "right-padded prefill would integrate pad tokens into "
+                "recurrent/encoder state (use Engine for R/S and enc-dec)")
+        self._front = (mcfg.n_frontend_tokens if mcfg.frontend == "vision"
+                       else 0)
+        if "L" in kinds and self._front + max(self.cfg.buckets) > mcfg.window:
+            raise ValueError(
+                f"buckets {self.cfg.buckets} (+ {self._front} frontend "
+                f"tokens) exceed the sliding window {mcfg.window}: pad "
+                "tokens would evict real history from the rolling cache")
+        if self.policy is not None:
+            if self.policy.weight_faults:
+                raise ValueError(
+                    "per-request fault streams need policy.weight_faults="
+                    "False (weights are shared across slots); use "
+                    "policy.tune(weight_faults=False)")
+            if ft_backend != "reference":
+                raise ValueError("per-request fault streams are reference-"
+                                 "backend only")
+
+        # cache capacity: every slot can hold the largest admitted prompt
+        # plus a full generation
+        self.capacity = (max(self.cfg.buckets) + self.cfg.max_new_tokens
+                         + self._front)
+
+        base = jax.random.PRNGKey(self.cfg.seed)
+        ftbase, sbase = jax.random.split(base)
+        self._ftbase, self._sbase = ftbase, sbase
+        temperature = self.cfg.temperature
+        capacity = self.capacity
+
+        def _ftc(keys):
+            if self.policy is None:
+                return None
+            from repro.models.common import FTCtx
+            return FTCtx(self.policy, keys, backend=ft_backend, t=ft_t,
+                         interpret=ft_interpret)
+
+        def _sample(logits, keys, tsteps):
+            if temperature <= 0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            def one(k, t, l):
+                return jax.random.categorical(
+                    jax.random.fold_in(k, t + 1), l / temperature)
+            return jax.vmap(one)(keys, tsteps, logits).astype(jnp.int32)
+
+        def _prefill_one(params, batch1, last_idx, rid):
+            # per-request streams: prefill draws from fold(fold(base, rid), 0)
+            # (B=1, so a single stream per call is already per-request)
+            ftk = jax.random.fold_in(jax.random.fold_in(ftbase, rid), 0)
+            caches, logits = model.prefill(params, batch1, max_len=capacity,
+                                           ftc=_ftc(ftk),
+                                           last_index=last_idx)
+            skey = jax.random.fold_in(sbase, rid)
+            tok0 = _sample(logits, skey[None], jnp.full((1,), -1, jnp.int32))
+            return caches, tok0[0]
+
+        def _insert(caches, c1, slot):
+            def one(path, c, n):
+                names = [getattr(k, "key", "") for k in path]
+                axis = 1 if str(names[0]).startswith("seg") else 0
+                return jax.lax.dynamic_update_slice_in_dim(c, n, slot, axis)
+            return jax.tree_util.tree_map_with_path(one, caches, c1)
+
+        def _chunk(params, caches, tok, pos, tstep, rids, active, n_steps):
+            act = active.astype(jnp.int32)
+
+            def body(carry, _):
+                caches, tok, pos, tstep = carry
+                keys = jax.vmap(
+                    lambda r, t: jax.random.fold_in(
+                        jax.random.fold_in(ftbase, r), t + 1))(rids, tstep)
+                caches, logits = model.decode_step(params, caches, tok, pos,
+                                                   ftc=_ftc(keys))
+                skeys = jax.vmap(jax.random.fold_in)(
+                    jnp.broadcast_to(sbase, (rids.shape[0],) + sbase.shape),
+                    rids)
+                nxt = _sample(logits, skeys, tstep)
+                tok = jnp.where(active, nxt, tok)
+                pos = pos + act
+                tstep = tstep + act
+                return (caches, tok, pos, tstep), nxt
+
+            (caches, tok, pos, tstep), toks = jax.lax.scan(
+                body, (caches, tok, pos, tstep), None, length=n_steps)
+            return caches, tok, pos, tstep, jnp.moveaxis(toks, 0, 1)
+
+        self._prefill_one = jax.jit(_prefill_one)
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+        self._chunk = jax.jit(_chunk, static_argnums=(7,),
+                              donate_argnums=(1,))
+
+    # ------------------------------------------------------------ helpers --
+    def _bucket(self, n: int) -> int:
+        for b in sorted(self.cfg.buckets):
+            if n <= b:
+                return b
+        raise ValueError(f"prompt length {n} exceeds largest bucket "
+                         f"{max(self.cfg.buckets)}")
+
+    def _make_batch1(self, req: Request):
+        L = len(req.tokens)
+        Lb = self._bucket(L)
+        toks = np.zeros((1, Lb), np.int32)
+        toks[0, :L] = req.tokens
+        batch1 = {"tokens": jnp.asarray(toks)}
+        for k, v in (req.extras or {}).items():
+            batch1[k] = jnp.asarray(v)[None]
+        last_idx = jnp.asarray([self._front + L - 1], jnp.int32)
+        return batch1, last_idx, self._front + L
+
+    # ---------------------------------------------------------------- run --
+    def run(self, requests) -> dict:
+        """Serve `requests` to completion; returns {rid: Request} with
+        ``generated`` / ``finish_reason`` filled."""
+        cfg = self.cfg
+        B = cfg.max_batch
+        self.stats = SchedStats()
+        seen_rids = set()
+        for req in requests:
+            self._bucket(len(req.tokens))   # fail fast, before any compute
+            if req.rid in seen_rids:
+                raise ValueError(
+                    f"duplicate request id {req.rid}: results are keyed by "
+                    "rid and the per-request fault streams derive from it")
+            seen_rids.add(req.rid)
+            if req.max_new_tokens > cfg.max_new_tokens:
+                raise ValueError(
+                    f"request {req.rid} wants {req.max_new_tokens} tokens "
+                    f"but the slot capacity budgets cfg.max_new_tokens="
+                    f"{cfg.max_new_tokens}: decoding past capacity would "
+                    "overwrite cache history")
+            req.generated = []              # a re-submitted Request restarts
+            req.finish_reason = None
+        queue = collections.deque(requests)
+        slots: list[Request | None] = [None] * B
+        out = {}
+
+        caches = self.model.init_cache(B, self.capacity)
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        tstep = np.zeros((B,), np.int32)
+        rids = np.zeros((B,), np.int32)
+
+        def finish(s, req, reason):
+            req.finish_reason = reason
+            out[req.rid] = req
+            slots[s] = None
+
+        while queue or any(s is not None for s in slots):
+            # ---- admit into free slots (a request that finishes at
+            # prefill — EOS first token or max_new_tokens == 1 — does not
+            # use up the slot's turn; the slot retries the queue) ---------
+            for s in range(B):
+                while slots[s] is None and queue:
+                    req = queue.popleft()
+                    batch1, last_idx, plen = self._make_batch1(req)
+                    c1, tok0 = self._prefill_one(
+                        self.params, batch1, last_idx,
+                        jnp.asarray(req.rid, jnp.int32))
+                    self.stats.prefill_calls += 1
+                    t0 = int(tok0)
+                    req.generated.append(t0)
+                    self.stats.tokens += 1
+                    if cfg.eos_id >= 0 and t0 == cfg.eos_id:
+                        req.finish_reason = "eos"
+                        out[req.rid] = req
+                        continue
+                    if len(req.generated) >= req.max_new_tokens:
+                        req.finish_reason = "length"
+                        out[req.rid] = req
+                        continue
+                    caches = self._insert(caches, c1,
+                                          jnp.asarray(s, jnp.int32))
+                    self.stats.insert_calls += 1
+                    slots[s] = req
+                    tok[s], pos[s], tstep[s], rids[s] = t0, plen, 0, req.rid
+
+            active = np.array([r is not None for r in slots])
+            if not active.any():
+                continue
+
+            # ---- one fused decode chunk --------------------------------
+            caches, tokj, posj, tstepj, toksj = self._chunk(
+                self.params, caches, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(tstep), jnp.asarray(rids),
+                jnp.asarray(active), cfg.decode_chunk)
+            self.stats.chunk_calls += 1
+            # np.array (not asarray): device outputs view as read-only, and
+            # the admission path writes slots in place
+            tok, pos, tstep = (np.array(tokj), np.array(posj),
+                               np.array(tstepj))
+            toks = np.asarray(toksj)                      # (B, chunk)
+
+            # ---- harvest + evict ---------------------------------------
+            for s in range(B):
+                req = slots[s]
+                if req is None:
+                    continue
+                for t in toks[s]:
+                    req.generated.append(int(t))
+                    self.stats.tokens += 1
+                    if cfg.eos_id >= 0 and int(t) == cfg.eos_id:
+                        finish(s, req, "eos")
+                        break
+                    if len(req.generated) >= req.max_new_tokens:
+                        finish(s, req, "length")
+                        break
+        return out

@@ -1,0 +1,152 @@
+"""Continuous-batching scheduler: eviction, bucket reuse, per-request
+fault-stream independence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ft
+from repro.configs import get_config
+from repro.models import build
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.scheduler import Request, Scheduler, SchedulerConfig
+
+
+@pytest.fixture(scope="module")
+def danube():
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    m = build(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompt(n, vocab, seed):
+    return [int(t) for t in jax.random.randint(jax.random.PRNGKey(seed),
+                                               (n,), 0, vocab)]
+
+
+def test_scheduler_matches_engine_greedy(danube):
+    """A lone request through the bucketed scheduler (padded prefill,
+    per-row positions, batch slots mostly idle) must emit exactly what the
+    engine emits for the same prompt — bucketing is a pure optimization."""
+    cfg, m, params = danube
+    prompt = _prompt(6, cfg.vocab, seed=1)
+    sched = Scheduler(m, params, SchedulerConfig(
+        max_batch=3, buckets=(8,), max_new_tokens=10, decode_chunk=4))
+    out = sched.run([Request(rid=0, tokens=prompt, max_new_tokens=10)])
+    eng = Engine(m, params, cfg=ServeConfig(max_new_tokens=10))
+    ref = np.asarray(eng.generate(
+        {"tokens": jnp.asarray([prompt], jnp.int32)}))[0]
+    assert out[0].generated == [int(t) for t in ref]
+    assert out[0].finish_reason == "length"
+
+
+def test_eos_and_length_eviction_reuse_slots(danube):
+    """More requests than slots: every request completes; EOS truncates at
+    the EOS token; the freed slot serves the queue."""
+    cfg, m, params = danube
+    mk = lambda: [Request(rid=i, tokens=_prompt(4 + i % 3, cfg.vocab, i),
+                          max_new_tokens=6 + (i % 2)) for i in range(5)]
+    sched = Scheduler(m, params, SchedulerConfig(
+        max_batch=2, buckets=(8,), max_new_tokens=8, decode_chunk=3))
+    probe = sched.run(mk())
+    assert set(probe) == set(range(5))
+    assert all(r.finish_reason == "length" for r in probe.values())
+    assert all(len(r.generated) == 6 + (i % 2) for i, r in probe.items())
+    # pick a token some request emits mid-stream and declare it EOS
+    rid, toks = 0, probe[0].generated
+    eos = toks[2]
+    first = toks.index(eos)
+    sched2 = Scheduler(m, params, SchedulerConfig(
+        max_batch=2, buckets=(8,), max_new_tokens=8, decode_chunk=3,
+        eos_id=eos))
+    done = sched2.run(mk())
+    assert set(done) == set(range(5))
+    assert done[rid].finish_reason == "eos"
+    assert done[rid].generated == toks[:first + 1]       # truncated at EOS
+    assert done[rid].generated[-1] == eos
+
+
+def test_bucket_reuse_bounds_recompiles(danube):
+    """Prompt lengths 3/5/7/11 under buckets (8, 16): exactly one prefill
+    executable per *bucket* (not per length), one chunk executable."""
+    cfg, m, params = danube
+    sched = Scheduler(m, params, SchedulerConfig(
+        max_batch=2, buckets=(8, 16), max_new_tokens=4, decode_chunk=2))
+    reqs = [Request(rid=i, tokens=_prompt(n, cfg.vocab, i), max_new_tokens=4)
+            for i, n in enumerate((3, 5, 7, 11))]
+    out = sched.run(reqs)
+    assert all(len(r.generated) == 4 for r in out.values())
+    assert sched._prefill_one._cache_size() == 2         # one per bucket
+    assert sched._chunk._cache_size() == 1
+    assert sched._insert._cache_size() == 1
+    # longer prompts than any bucket are rejected, not silently truncated
+    with pytest.raises(ValueError):
+        sched.run([Request(rid=9, tokens=_prompt(20, cfg.vocab, 9))])
+
+
+def test_per_request_fault_stream_independence(danube):
+    """Under a protection policy with faults, a request's generation is a
+    pure function of (request id, its own tokens): serving it alone or
+    beside other traffic yields bit-identical tokens, so reliability
+    accounting stays per-request."""
+    cfg, m, params = danube
+    policy = ft.get_policy("crt1", ber=3e-3, weight_faults=False)
+    scfg = SchedulerConfig(max_batch=3, buckets=(8,), max_new_tokens=8,
+                           decode_chunk=4)
+    a_alone = Scheduler(m, params, scfg, policy=policy).run(
+        [Request(rid=7, tokens=_prompt(5, cfg.vocab, 7), max_new_tokens=8)])
+    crowd = [Request(rid=7, tokens=_prompt(5, cfg.vocab, 7),
+                     max_new_tokens=8),
+             Request(rid=8, tokens=_prompt(3, cfg.vocab, 8),
+                     max_new_tokens=8),
+             Request(rid=9, tokens=_prompt(7, cfg.vocab, 9),
+                     max_new_tokens=8)]
+    a_crowded = Scheduler(m, params, scfg, policy=policy).run(crowd)
+    assert a_alone[7].generated == a_crowded[7].generated
+    # faults are real: the protected stream differs from the clean one
+    clean = Scheduler(m, params, scfg).run(
+        [Request(rid=7, tokens=_prompt(5, cfg.vocab, 7), max_new_tokens=8)])
+    assert clean[7].generated != a_alone[7].generated
+
+
+def test_scheduler_guards(danube):
+    cfg, m, params = danube
+    # shared weight SRAM: per-request streams need weight_faults=False
+    with pytest.raises(ValueError, match="weight_faults"):
+        Scheduler(m, params, policy=ft.get_policy("crt1", ber=1e-3))
+    # sliding-window models: buckets must fit inside the window
+    with pytest.raises(ValueError, match="window"):
+        Scheduler(m, params, SchedulerConfig(buckets=(8, 64)))
+    # recurrent state would integrate pad tokens
+    ssm_cfg = get_config("mamba2-2.7b", reduced=True)
+    ssm = build(ssm_cfg)
+    with pytest.raises(ValueError, match="attention"):
+        Scheduler(ssm, ssm.init(jax.random.PRNGKey(0)))
+    # fail-fast request validation: duplicate rids (results and fault
+    # streams are keyed by rid) and per-request caps beyond slot capacity
+    sched = Scheduler(m, params, SchedulerConfig(
+        max_batch=2, buckets=(8,), max_new_tokens=4))
+    with pytest.raises(ValueError, match="duplicate"):
+        sched.run([Request(rid=1, tokens=_prompt(4, cfg.vocab, 0),
+                           max_new_tokens=4),
+                   Request(rid=1, tokens=_prompt(4, cfg.vocab, 1),
+                           max_new_tokens=4)])
+    with pytest.raises(ValueError, match="capacity"):
+        sched.run([Request(rid=1, tokens=_prompt(4, cfg.vocab, 0),
+                           max_new_tokens=9)])
+
+
+def test_scheduler_vision_frontend():
+    cfg = get_config("paligemma-3b", reduced=True)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    reqs = [Request(rid=i, tokens=_prompt(4 + i, cfg.vocab, i),
+                    max_new_tokens=5,
+                    extras={"patch_embeds": jax.random.normal(
+                        jax.random.PRNGKey(50 + i),
+                        (cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)})
+            for i in range(3)]
+    sched = Scheduler(m, params, SchedulerConfig(
+        max_batch=2, buckets=(8,), max_new_tokens=5, decode_chunk=2))
+    out = sched.run(reqs)
+    assert all(len(r.generated) == 5 for r in out.values())
