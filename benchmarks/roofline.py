@@ -18,13 +18,12 @@ f32 promotion.
 from __future__ import annotations
 
 import json
-import math
 import os
 
 import jax
 import numpy as np
 
-from repro.configs import ARCHS, SHAPES, get_config, get_run_config
+from repro.configs import ARCHS, SHAPES, get_config
 from repro.models import build
 
 PEAK_FLOPS = 197e12
@@ -36,14 +35,14 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results")
 def param_count(cfg):
     m = build(cfg)
     spec = m.param_specs()
-    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(spec))
+    total = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(spec))
     active = total
     if cfg.moe:
         expert = 0
-        for path, l in jax.tree_util.tree_flatten_with_path(spec)[0]:
+        for path, leaf in jax.tree_util.tree_flatten_with_path(spec)[0]:
             names = [getattr(k, "key", "") for k in path]
-            if names[-1] in ("wi", "wg", "wo") and l.ndim == 4:
-                expert += int(np.prod(l.shape))
+            if names[-1] in ("wi", "wg", "wo") and leaf.ndim == 4:
+                expert += int(np.prod(leaf.shape))
         active = total - expert + expert * cfg.moe.top_k / cfg.moe.n_experts
     return total, active
 

@@ -28,9 +28,9 @@ from repro import ft
 from repro.core import area
 from repro.core.flexhyca import clean_linear
 
-key = jax.random.PRNGKey(0)
-x = jax.random.normal(key, (128, 256))
-w = jax.random.normal(jax.random.fold_in(key, 1), (256, 64))
+kx, kw, kfault = jax.random.split(jax.random.PRNGKey(0), 3)
+x = jax.random.normal(kx, (128, 256))
+w = jax.random.normal(kw, (256, 64))
 ref = clean_linear(x, w)
 
 
@@ -44,7 +44,7 @@ print(f"substrate BER = {BER} (compute-array soft errors; weight SRAM has ECC)")
 
 # --- unprotected DLA -------------------------------------------------------
 base = ft.get_policy("base", ber=BER, weight_faults=False)
-y_base = ft.protect_linear(key, x, w, base)
+y_base = ft.protect_linear(kfault, x, w, base)
 print(f"unprotected      rel-RMS error: {rel_rms(y_base):.4f}")
 
 # --- the paper's cross-layer protection ------------------------------------
@@ -56,12 +56,13 @@ important = importance >= thresh
 
 cl = ft.get_policy("cl", ber=BER, s_th=0.1, ib_th=4, nb_th=2, q_scale=7,
                    weight_faults=False)
-y_cl = ft.protect_linear(key, x, w, cl, important=important)
+# ftlint: disable=FTL001 -- same fault stream as the unprotected design
+y_cl = ft.protect_linear(kfault, x, w, cl, important=important)
 print(f"TMR-CL protected rel-RMS error: {rel_rms(y_cl):.4f}")
 
 # --- sweep the BER axis with one compiled executable -----------------------
 bers = jnp.array([1e-4, 1e-3, 1e-2, 5e-2], jnp.float32)
-sweep = jax.vmap(lambda p: ft.protect_linear(key, x, w, p,
+sweep = jax.vmap(lambda p: ft.protect_linear(kfault, x, w, p,
                                              important=important))
 ys = sweep(cl.with_ber(bers))
 errs = ", ".join(f"{float(b):g}: {rel_rms(y):.4f}" for b, y in zip(bers, ys))

@@ -43,7 +43,7 @@ def main():
 
     import jax
     import numpy as np
-    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(model.param_specs()))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(model.param_specs()))
     print(f"model: {cfg.name}  params={n/1e6:.1f}M")
 
     shape = ShapeConfig("train", "train", args.seq, args.batch)

@@ -10,6 +10,6 @@ The public fault-tolerance API lives in :mod:`repro.ft` (policy registry +
 ``protect_linear``); ``FTConfig``/``ft_linear`` remain as a compatibility
 surface.
 """
-from repro.core.flexhyca import FTConfig, ft_linear, clean_linear  # noqa: F401
 from repro.core.bayesopt import Constraints, bayes_design_opt, table1_space  # noqa: F401
+from repro.core.flexhyca import FTConfig, clean_linear, ft_linear  # noqa: F401
 from repro.core.pipeline import optimize  # noqa: F401

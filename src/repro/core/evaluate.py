@@ -30,8 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.importance import ImportanceResult, neuron_importance
-from repro.ft import ProtectionPolicy, as_policy, get_policy
 from repro.data.pipeline import vision_batch
+from repro.ft import ProtectionPolicy, as_policy, get_policy
 from repro.models.cnn import CNNConfig, accuracy, apply_cnn, xent_loss
 from repro.models.common import FTCtx
 

@@ -16,7 +16,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,11 +57,13 @@ def make_batch(model_cfg, shape, step: int, data_cfg: DataConfig | None = None,
     key = jax.random.fold_in(jax.random.PRNGKey(d.seed + 7), step)
     if model_cfg.frontend == "vision":
         batch["patch_embeds"] = jax.random.normal(
-            key, (B // process_count, n_front, model_cfg.d_model),
+            jax.random.fold_in(key, 1),
+            (B // process_count, n_front, model_cfg.d_model),
             compute_dtype)
     if model_cfg.enc_dec:
         batch["frames"] = jax.random.normal(
-            key, (B // process_count, S, model_cfg.d_model), compute_dtype)
+            jax.random.fold_in(key, 2),
+            (B // process_count, S, model_cfg.d_model), compute_dtype)
     return batch
 
 

@@ -20,5 +20,8 @@ from repro.ft.policy import (AlgorithmLayer, ArchLayer,  # noqa: F401
                              CircuitLayer, ProtectionPolicy)
 from repro.ft.registry import (get_policy, list_policies,  # noqa: F401
                                paper_policies, register_policy)
+# compat and api must import after policy/registry are bound (see above)
+# isort: split
 from repro.ft.compat import as_policy, from_ftconfig  # noqa: F401
+# isort: split
 from repro.ft.api import BACKENDS, calibrate_t, protect_linear  # noqa: F401

@@ -89,10 +89,10 @@ def chunked_attention(q, k, v, *, causal=True, window=0, cap=0.0,
         qi = qi.astype(jnp.float32)
         acc = jnp.zeros((B, KH, G, block, Dh), jnp.float32)
         m = jnp.full((B, KH, G, block), NEG, jnp.float32)
-        l = jnp.zeros((B, KH, G, block), jnp.float32)
+        den = jnp.zeros((B, KH, G, block), jnp.float32)
 
         def block_update(j, kj, vj, carry):
-            acc, m, l = carry
+            acc, m, den = carry
             s = jnp.einsum("bqkgd,bvkd->bkgqv", qi, kj.astype(jnp.float32))
             s = softcap(s, cap)
             pq = i * block + jnp.arange(block)[:, None]
@@ -106,10 +106,10 @@ def chunked_attention(q, k, v, *, causal=True, window=0, cap=0.0,
             mj = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - mj[..., None])
             corr = jnp.exp(m - mj)
-            l2 = l * corr + p.sum(-1)
+            den2 = den * corr + p.sum(-1)
             acc2 = acc * corr[..., None] + jnp.einsum(
                 "bkgqv,bvkd->bkgqd", p, vj.astype(jnp.float32))
-            return acc2, mj, l2
+            return acc2, mj, den2
 
         if differentiable:
             def body(carry, xs2):
@@ -117,8 +117,8 @@ def chunked_attention(q, k, v, *, causal=True, window=0, cap=0.0,
                 return block_update(j, kj, vj, carry), None
             # remat each kv block: the backward pass recomputes the (blk x
             # blk) score tile instead of saving O(S^2/blk^2) of them
-            (acc, m, l), _ = jax.lax.scan(
-                jax.checkpoint(body, prevent_cse=False), (acc, m, l),
+            (acc, m, den), _ = jax.lax.scan(
+                jax.checkpoint(body, prevent_cse=False), (acc, m, den),
                 (jnp.arange(nk), jnp.moveaxis(kb, 1, 0),
                  jnp.moveaxis(vb, 1, 0)))
         else:
@@ -128,8 +128,8 @@ def chunked_attention(q, k, v, *, causal=True, window=0, cap=0.0,
                 return block_update(j, kj, vj, carry)
             hi = jnp.minimum(i + 1, nk) if causal else nk
             lo = jnp.maximum(i + 1 - w_blocks, 0) if window else 0
-            acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc, m, l))
-        o = acc / jnp.maximum(l[..., None], 1e-30)
+            acc, m, den = jax.lax.fori_loop(lo, hi, body, (acc, m, den))
+        o = acc / jnp.maximum(den[..., None], 1e-30)
         return None, jnp.moveaxis(o, 3, 1)   # (B, blk, KH, G, Dh)
 
     _, o = jax.lax.scan(per_q, None, (jnp.arange(nq), qb))

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
-from repro.models import attention, rglru, ssm, transformer as T
+from repro.models import attention, ssm, transformer as T
 from repro.models.common import dtype_of, rms_norm
 
 

@@ -15,8 +15,6 @@ boundary performs the per-layer FSDP all-gather.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

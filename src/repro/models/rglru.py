@@ -63,9 +63,9 @@ def _block_diag(x, w):
 
 def _recurrence(a, bx):
     """h_t = a_t h_{t-1} + bx_t via associative scan over axis 1."""
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
         return al * ar, bl * ar + br
     _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
     return h

@@ -7,15 +7,12 @@ and FT instrumentation).  Modes: train | prefill | decode.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention, mlp, moe, rglru, ssm
-from repro.models.common import (ac, dense_init, dtype_of, embed_init, linear,
-                                 rms_norm, softcap, tag)
+from repro.models.common import (ac, dtype_of, embed_init, linear, rms_norm,
+                                 softcap)
 
 MIXERS = {"G": attention, "L": attention, "E": attention,
           "R": rglru, "S": ssm}

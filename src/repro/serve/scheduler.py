@@ -132,9 +132,9 @@ class Scheduler:
         def _sample(logits, keys, tsteps):
             if temperature <= 0:
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            def one(k, t, l):
+            def one(k, t, lg):
                 return jax.random.categorical(
-                    jax.random.fold_in(k, t + 1), l / temperature)
+                    jax.random.fold_in(k, t + 1), lg / temperature)
             return jax.vmap(one)(keys, tsteps, logits).astype(jnp.int32)
 
         def _prefill_one(params, batch1, last_idx, rid):

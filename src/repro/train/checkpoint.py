@@ -107,5 +107,5 @@ def restore(ckpt_dir: str, like, step: int | None = None,
         assert arr.shape == tuple(leaf.shape), (name, arr.shape, leaf.shape)
         arr = arr.astype(leaf.dtype)
         leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
-    state = jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
     return state, step, meta.get("data_state", {})

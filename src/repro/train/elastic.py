@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-
 from repro.parallel import sharding as S
 from repro.train import checkpoint as ckpt
 from repro.train.train_step import state_shardings

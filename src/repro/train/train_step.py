@@ -14,7 +14,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.optim import AdamWConfig, adamw_update, init_opt_state
 from repro.parallel import sharding as S
-from repro.parallel.ctx import MeshCtx, mesh_ctx
+from repro.parallel.ctx import mesh_ctx
 
 
 def make_loss_fn(model):

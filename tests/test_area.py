@@ -1,5 +1,3 @@
-import pytest
-
 from repro.core import area as A
 
 

@@ -13,8 +13,6 @@ The fix raises the benchmark's data noise to 1.6 (train_cnn / CnnOracle
 defaults), putting clean accuracy at ~0.98: measured there, BER 2e-3
 degrades accuracy by ~0.17 and the layer spread is ~0.065, so the margins
 below test the paper's actual claims with real headroom."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

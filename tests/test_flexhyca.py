@@ -1,5 +1,3 @@
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -54,6 +52,7 @@ def test_whole_layer_tmr_near_clean(xw):
         cfg = FTConfig(ber=0.005, strategy="arch", weight_faults=False)
         d_prot.append(damage(ft_linear(key, x, w, cfg,
                                        layer_protected=True), x, w))
+        # ftlint: disable=FTL001 -- paired run: identical fault stream
         d_unprot.append(damage(ft_linear(key, x, w, cfg,
                                          layer_protected=False), x, w))
     # whole-layer TMR leaves only the 3*ber^2 residual: damage collapses

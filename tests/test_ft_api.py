@@ -228,6 +228,7 @@ def test_pallas_backend_clean_parity(xw, imp):
     key = jax.random.PRNGKey(29)
     for name in ("base", "cl", "crt2"):
         pol = ft.get_policy(name, weight_faults=False)
+        # ftlint: disable=FTL001 -- parity test: one key for all backends
         y_ref = ft.protect_linear(key, x, w, pol, important=imp,
                                   backend="reference")
         y_pal = ft.protect_linear(key, x, w, pol, important=imp,
@@ -249,6 +250,7 @@ def test_pallas_backend_protection_helps(xw):
     d = {}
     for name in ("base", "crt3"):
         pol = ft.get_policy(name, ber=0.02, weight_faults=False)
+        # ftlint: disable=FTL001 -- paired run: identical fault stream
         d[name] = dmg(ft.protect_linear(key, x, w, pol, backend="pallas"))
     assert d["crt3"] < d["base"]
 
@@ -264,6 +266,7 @@ def test_pallas_whole_layer_tmr(xw):
 
     prot = dmg(ft.protect_linear(key, x, w, pol, backend="pallas",
                                  layer_protected=True))
+    # ftlint: disable=FTL001 -- paired run: identical fault stream
     unprot = dmg(ft.protect_linear(key, x, w, pol, backend="pallas",
                                    layer_protected=False))
     assert prot < unprot

@@ -2,7 +2,6 @@
 the two_pass recompute votes identical values, so outputs must match the
 plain path up to dtype noise — the variants differ only in COST."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -28,11 +27,12 @@ def test_emu_loss_matches_unprotected():
                                           cfg.vocab)}
     runs = [RunConfig(param_dtype="float32", compute_dtype="float32",
                       ft_emu=m) for m in ("", "two_pass", "fused")]
-    losses = []
-    for run in runs:
+    def loss_of(run):
         m = build(cfg, run)
         params = m.init(jax.random.PRNGKey(0))
-        loss, _ = jax.jit(m.loss)(params, batch)
-        losses.append(float(loss))
+        loss, _ = jax.jit(lambda p, b: m.loss(p, b))(params, batch)
+        return float(loss)
+
+    losses = [loss_of(run) for run in runs]
     assert abs(losses[0] - losses[1]) < 1e-4
     assert abs(losses[0] - losses[2]) < 1e-6

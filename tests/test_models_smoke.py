@@ -50,10 +50,10 @@ def test_reduced_decode_matches_full_forward(arch):
     batch_full = make_batch(cfg, B, S, jax.random.PRNGKey(1))
     batch_pre = dict(batch_full)
     batch_pre["tokens"] = batch_full["tokens"][:, :-1]
-    _, logits_full = jax.jit(m.prefill)(params, batch_full)
+    _, logits_full = jax.jit(lambda p, b: m.prefill(p, b))(params, batch_full)
     caches, _ = jax.jit(lambda p, b: m.prefill(p, b, max_len=S + 4))(
         params, batch_pre)
-    _, logits_dec = jax.jit(m.decode_step)(
+    _, logits_dec = jax.jit(lambda p, c, t, i: m.decode_step(p, c, t, i))(
         params, caches, batch_full["tokens"][:, -1],
         jnp.asarray(S - 1, jnp.int32))
     scale = float(jnp.abs(logits_full).max()) + 1e-9
@@ -70,8 +70,8 @@ def test_scan_path_matches_unrolled(arch):
     pu = mu.init(jax.random.PRNGKey(0))
     ps = ms.init(jax.random.PRNGKey(0))
     batch = make_batch(cfg_u, 2, 16, jax.random.PRNGKey(1))
-    lu, _ = jax.jit(mu.loss)(pu, batch)
-    ls, _ = jax.jit(ms.loss)(ps, batch)
+    lu, _ = jax.jit(lambda p, b: mu.loss(p, b))(pu, batch)
+    ls, _ = jax.jit(lambda p, b: ms.loss(p, b))(ps, batch)
     # different init trees (per-layer fold_in vs vmap split) — only check
     # both are healthy; exact equivalence is covered by decode tests
     assert np.isfinite(float(lu)) and np.isfinite(float(ls))
@@ -94,7 +94,7 @@ def test_full_configs_construct_specs_only():
         cfg = get_config(arch)
         m = build(cfg)
         spec = m.param_specs()
-        n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(spec))
+        n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(spec))
         exp = EXPECTED_PARAMS[arch]
         assert 0.65 * exp < n_params < 1.35 * exp, (arch, n_params, exp)
         bs = m.batch_specs(SHAPES["train_4k"])

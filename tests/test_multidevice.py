@@ -1,7 +1,6 @@
 """Multi-device behaviour (sharding rules, elastic re-mesh, distributed MoE)
 run in subprocesses with forced host-device counts, so the main test process
 keeps its single-device view."""
-import json
 import os
 import subprocess
 import sys

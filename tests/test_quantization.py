@@ -1,6 +1,5 @@
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")

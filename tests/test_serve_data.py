@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import RunConfig
+from repro.configs.base import ShapeConfig
 from repro.data.pipeline import DataConfig, LMIterator, lm_batch, make_batch, vision_batch
 from repro.models import build
 from repro.serve.engine import Engine, ServeConfig
@@ -72,7 +72,6 @@ def test_host_sharding_partitions_batch():
 
 def test_iterator_resume():
     cfg = get_config("h2o-danube-1.8b", reduced=True)
-    from repro.configs.base import ShapeConfig
     shape = ShapeConfig("t", "train", 32, 4)
     it = LMIterator(cfg, shape)
     next(it); next(it)
@@ -91,10 +90,22 @@ def test_vision_batch_learnable():
     # same-class images correlate more than cross-class
     same = cross = 0.0
     v = np.asarray(imgs).reshape(64, -1)
-    l = np.asarray(labels)
+    lab = np.asarray(labels)
     corr = np.corrcoef(v)
     same = np.mean([corr[i, j] for i in range(64) for j in range(i + 1, 64)
-                    if l[i] == l[j]])
+                    if lab[i] == lab[j]])
     cross = np.mean([corr[i, j] for i in range(64) for j in range(i + 1, 64)
-                     if l[i] != l[j]])
+                     if lab[i] != lab[j]])
     assert same > cross + 0.2
+
+
+def test_make_batch_aux_streams_independent():
+    """patch_embeds and frames must come from distinct key derivations:
+    with a shared key, equal shapes made them bit-identical (FTL001)."""
+    import dataclasses
+    m = dataclasses.replace(get_config("paligemma-3b", reduced=True),
+                            frontend="vision", n_frontend_tokens=16,
+                            enc_dec=True)
+    b = make_batch(m, ShapeConfig("t", "train", 16, 4), step=0)
+    assert not np.array_equal(np.asarray(b["patch_embeds"]),
+                              np.asarray(b["frames"]))

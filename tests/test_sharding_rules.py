@@ -1,7 +1,6 @@
 """Sharding-rule unit tests on the abstract production mesh (no devices)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import AbstractMesh, PartitionSpec as P
 from jax.tree_util import DictKey
 

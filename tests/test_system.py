@@ -1,16 +1,13 @@
 """End-to-end behaviour tests: the full cross-layer optimization pipeline
 (paper Fig. 1) from sensitivity analysis through Bayesian DSE."""
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import bayesopt as B
 from repro.core import perfmodel as P
 from repro.core.evaluate import trained_cnn
+from repro.core.flexhyca import FTConfig
 from repro.core.pipeline import optimize
 from repro.core.strategies import make_strategies
-from repro.core.flexhyca import FTConfig
 
 
 @pytest.fixture(scope="module")

@@ -1,12 +1,9 @@
 """Training loop: loss goes down, checkpoint/restart is bit-exact, straggler
 mitigation triggers, gradient accumulation is consistent."""
-import os
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.configs.base import RunConfig, ShapeConfig

@@ -1,0 +1,21 @@
+"""ftlint — repo-native static analysis for the fault-tolerance contracts.
+
+The paper's reliability numbers are only as credible as the software's
+invariants: exact fault-stream accounting (every fault draw keyed by a
+fresh PRNG key), an integer-only protected datapath, policy pytrees whose
+sole dynamic leaf is ``ber``, deterministic traced code, and Pallas kernels
+that stay bit-exact against their references.  Those contracts used to live
+in prose and in whichever parity tests someone remembered to write; ftlint
+enforces them mechanically on every commit.
+
+Usage:
+
+    python -m tools.ftlint src tests benchmarks examples
+
+See ``docs/ftlint.md`` for the rule catalogue and the bug each rule
+generalizes.
+"""
+from tools.ftlint.core import Finding, lint_file, lint_paths, lint_source
+from tools.ftlint.rules import ALL_RULES
+
+__all__ = ["ALL_RULES", "Finding", "lint_file", "lint_paths", "lint_source"]

@@ -1,0 +1,4 @@
+"""Entry point: ``python -m tools.ftlint src tests benchmarks examples``."""
+from tools.ftlint.core import main
+
+raise SystemExit(main())

@@ -1,0 +1,208 @@
+"""ftlint rule engine: findings, suppressions, baseline, file walking.
+
+A *rule* is an object with ``code``, ``name``, ``invariant`` and a
+``check(ctx) -> list[Finding]`` method; ``ctx`` is a :class:`ModuleCtx`
+carrying the parsed AST plus shared analyses (import aliases, traced-code
+detection — see ``tools.ftlint.jaxctx``).
+
+Suppression contract: a finding on line N is suppressed by an inline
+comment on that line (or on the line directly above, when the marker is
+the whole line)::
+
+    y = risky_thing()  # ftlint: disable=FTL001 -- why this is sound
+
+The justification after ``--`` is mandatory: a bare ``disable`` is itself
+reported (as FTL000) so waivers stay reviewable.
+
+Baseline contract: ``tools/ftlint/baseline.txt`` holds grandfathered
+findings as ``CODE path::scope::message`` lines (line numbers excluded so
+unrelated edits don't invalidate entries).  The goal state is an empty
+baseline; CI uploads the full report so drift is visible.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+
+from tools.ftlint.jaxctx import ModuleCtx
+
+SUPPRESS_RE = re.compile(
+    r"#\s*ftlint:\s*disable=([A-Z0-9,\s]+?)\s*(?:--\s*(\S.*))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str          # FTLxxx
+    path: str          # repo-relative posix path
+    line: int          # 1-indexed
+    col: int
+    scope: str         # enclosing function qualname ("<module>" at top level)
+    message: str
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.code} "
+                f"[{self.scope}] {self.message}")
+
+    def baseline_key(self) -> str:
+        return f"{self.code} {self.path}::{self.scope}::{self.message}"
+
+
+# ----------------------------------------------------------- suppressions --
+def _suppressions(source: str) -> dict[int, tuple[set[str], str | None]]:
+    """line -> (set of disabled codes, justification or None)."""
+    out: dict[int, tuple[set[str], str | None]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+        out[i] = (codes, m.group(2))
+        # a marker-only line covers the next line of code
+        if text.strip().startswith("#"):
+            out[i + 1] = (codes, m.group(2))
+    return out
+
+
+def _apply_suppressions(findings: list[Finding], source: str,
+                        path: str) -> list[Finding]:
+    sup = _suppressions(source)
+    kept: list[Finding] = []
+    used: set[int] = set()
+    for f in findings:
+        entry = sup.get(f.line)
+        if entry and (f.code in entry[0] or "ALL" in entry[0]):
+            used.add(f.line)
+            if not entry[1]:
+                kept.append(Finding(
+                    "FTL000", path, f.line, f.col, f.scope,
+                    f"suppression of {f.code} lacks a justification "
+                    "(write '# ftlint: disable=CODE -- reason')"))
+            continue
+        kept.append(f)
+    return kept
+
+
+# ---------------------------------------------------------------- linting --
+def lint_source(source: str, path: str = "<string>",
+                rules=None) -> list[Finding]:
+    """Lint one module's source text.  Syntax errors are reported as FTL000
+    rather than crashing the whole run."""
+    from tools.ftlint.rules import ALL_RULES
+    rules = ALL_RULES if rules is None else rules
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("FTL000", path, e.lineno or 1, e.offset or 0,
+                        "<module>", f"syntax error: {e.msg}")]
+    ctx = ModuleCtx(tree=tree, source=source, path=path)
+    findings: list[Finding] = []
+    for rule in rules:
+        findings.extend(rule.check(ctx))
+    findings.sort(key=lambda f: (f.line, f.col, f.code))
+    return _apply_suppressions(findings, source, path)
+
+
+def lint_file(fp: Path, root: Path, rules=None) -> list[Finding]:
+    rel = fp.resolve().relative_to(root.resolve()).as_posix() \
+        if fp.resolve().is_relative_to(root.resolve()) else fp.as_posix()
+    return lint_source(fp.read_text(), rel, rules)
+
+
+def iter_py_files(paths: list[str], root: Path):
+    for p in paths:
+        fp = (root / p) if not Path(p).is_absolute() else Path(p)
+        if fp.is_dir():
+            yield from sorted(fp.rglob("*.py"))
+        elif fp.suffix == ".py":
+            yield fp
+
+
+def lint_paths(paths: list[str], root: Path | None = None,
+               rules=None) -> list[Finding]:
+    root = root or Path.cwd()
+    findings: list[Finding] = []
+    for fp in iter_py_files(paths, root):
+        findings.extend(lint_file(fp, root, rules))
+    return findings
+
+
+# --------------------------------------------------------------- baseline --
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    out = set()
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            out.add(line)
+    return out
+
+
+def split_baselined(findings: list[Finding],
+                    baseline: set[str]) -> tuple[list[Finding], list[Finding]]:
+    new, old = [], []
+    for f in findings:
+        (old if f.baseline_key() in baseline else new).append(f)
+    return new, old
+
+
+# -------------------------------------------------------------------- CLI --
+def main(argv=None) -> int:
+    from tools.ftlint.rules import ALL_RULES
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.ftlint",
+        description="Static analysis for the repo's fault-tolerance "
+                    "correctness contracts (see docs/ftlint.md).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint")
+    ap.add_argument("--baseline",
+                    default=str(Path(__file__).parent / "baseline.txt"),
+                    help="grandfathered-findings file")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings as errors too")
+    ap.add_argument("--write-report", metavar="PATH",
+                    help="write a JSON report (CI artifact)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(f"{r.code}  {r.name}")
+            print(f"        invariant: {r.invariant}")
+        return 0
+
+    root = Path.cwd()
+    findings = lint_paths(args.paths, root)
+    baseline = set() if args.no_baseline else load_baseline(
+        Path(args.baseline))
+    new, old = split_baselined(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    if old:
+        print(f"[ftlint] {len(old)} baselined finding(s) not shown "
+              f"(--no-baseline to list)", file=sys.stderr)
+    stale = baseline - {f.baseline_key() for f in findings}
+    if stale:
+        print(f"[ftlint] note: {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} (fixed or moved — "
+              "prune tools/ftlint/baseline.txt)", file=sys.stderr)
+
+    if args.write_report:
+        report = {
+            "new": [dataclasses.asdict(f) for f in new],
+            "baselined": [dataclasses.asdict(f) for f in old],
+            "stale_baseline": sorted(stale),
+        }
+        Path(args.write_report).write_text(json.dumps(report, indent=2))
+
+    n_files = len(list(iter_py_files(args.paths, root)))
+    status = "clean" if not new else f"{len(new)} finding(s)"
+    print(f"[ftlint] {n_files} files, {len(ALL_RULES)} rules: {status}",
+          file=sys.stderr)
+    return 1 if new else 0

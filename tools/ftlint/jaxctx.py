@@ -1,0 +1,174 @@
+"""Shared per-module analyses for ftlint rules.
+
+``ModuleCtx`` wraps a parsed module and lazily computes:
+
+  * import alias resolution (``jnp`` -> ``jax.numpy``,
+    ``pl`` -> ``jax.experimental.pallas``, ``from jax import random`` ->
+    ``jax.random`` ...), so rules match call targets by canonical dotted
+    name regardless of local import style;
+  * parent links and enclosing-scope qualnames for findings;
+  * *traced-code* detection: the set of function nodes whose bodies run
+    under a JAX trace — jit-decorated functions, functions passed to
+    ``jax.jit`` / ``jax.vmap`` / ``jax.grad`` / ``jax.pmap``, bodies handed
+    to ``jax.lax`` control-flow combinators (``scan`` / ``while_loop`` /
+    ``fori_loop`` / ``cond`` / ``switch``), Pallas kernel bodies, and
+    everything lexically nested inside any of those.
+
+Traced-code detection is deliberately intraprocedural-plus-names: a local
+function whose *name* is later wrapped (``self._step = jax.jit(_step)``)
+is traced; calls across modules are not chased.  That is the right
+trade-off for a blocking linter — no false positives from dynamic
+dispatch, and the repo's jit wrapping is overwhelmingly local.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from functools import cached_property
+
+FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# jax entry points whose function-valued arguments are traced
+_TRACING_WRAPPERS = {
+    "jax.jit", "jax.vmap", "jax.pmap", "jax.grad", "jax.value_and_grad",
+    "jax.checkpoint", "jax.remat", "jax.linearize", "jax.vjp", "jax.jvp",
+    "jax.experimental.shard_map.shard_map", "jax.shard_map",
+}
+_LAX_COMBINATORS = {
+    "jax.lax.scan", "jax.lax.while_loop", "jax.lax.fori_loop",
+    "jax.lax.cond", "jax.lax.switch", "jax.lax.map",
+    "jax.lax.associative_scan", "jax.lax.custom_root",
+}
+_PALLAS_CALLS = {"jax.experimental.pallas.pallas_call"}
+_JIT_DECORATORS = {"jax.jit", "jax.pmap"}
+
+
+@dataclasses.dataclass
+class ModuleCtx:
+    tree: ast.Module
+    source: str
+    path: str
+
+    # ------------------------------------------------------------ imports --
+    @cached_property
+    def aliases(self) -> dict[str, str]:
+        """Local name -> canonical dotted prefix."""
+        out: dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    out[a.asname or a.name] = f"{node.module}.{a.name}"
+        return out
+
+    def dotted(self, node: ast.AST) -> str | None:
+        """Canonical dotted name of a Name/Attribute chain, with the root
+        resolved through the module's import aliases."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.aliases.get(node.id, node.id)
+        return ".".join([root] + list(reversed(parts)))
+
+    def call_target(self, call: ast.Call) -> str | None:
+        return self.dotted(call.func)
+
+    # ------------------------------------------------------------ parents --
+    @cached_property
+    def parents(self) -> dict[ast.AST, ast.AST]:
+        out: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                out[child] = node
+        return out
+
+    def scope_of(self, node: ast.AST) -> str:
+        """Qualname of the innermost enclosing function ("<module>" if none)."""
+        names: list[str] = []
+        cur = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                names.append(cur.name)
+            elif isinstance(cur, ast.ClassDef):
+                names.append(cur.name)
+            cur = self.parents.get(cur)
+        return ".".join(reversed(names)) or "<module>"
+
+    def enclosing_function(self, node: ast.AST):
+        cur = self.parents.get(node)
+        while cur is not None and not isinstance(cur, FUNC_NODES):
+            cur = self.parents.get(cur)
+        return cur
+
+    # ------------------------------------------------------- traced code ---
+    def _is_jit_decorator(self, dec: ast.AST) -> bool:
+        name = self.dotted(dec)
+        if name in _JIT_DECORATORS:
+            return True
+        if isinstance(dec, ast.Call):
+            target = self.call_target(dec)
+            if target in _JIT_DECORATORS:
+                return True
+            # functools.partial(jax.jit, ...) / partial(jax.jit, ...)
+            if target in ("functools.partial", "partial") and dec.args:
+                return self.dotted(dec.args[0]) in _JIT_DECORATORS
+        return False
+
+    @cached_property
+    def traced_functions(self) -> set[ast.AST]:
+        """Function nodes whose bodies execute under a JAX trace."""
+        roots: set[ast.AST] = set()
+        defs_by_name: dict[str, list[ast.AST]] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs_by_name.setdefault(node.name, []).append(node)
+                if any(self._is_jit_decorator(d) for d in node.decorator_list):
+                    roots.add(node)
+
+        def mark_func_arg(arg: ast.AST):
+            if isinstance(arg, FUNC_NODES):
+                roots.add(arg)
+            elif isinstance(arg, ast.Name):
+                for d in defs_by_name.get(arg.id, []):
+                    roots.add(d)
+            elif isinstance(arg, ast.Call):
+                # functools.partial(body, ...) wrapping a kernel body
+                target = self.call_target(arg)
+                if target in ("functools.partial", "partial") and arg.args:
+                    mark_func_arg(arg.args[0])
+
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = self.call_target(node)
+            if target in _TRACING_WRAPPERS and node.args:
+                mark_func_arg(node.args[0])
+            elif target in _LAX_COMBINATORS:
+                for a in node.args:
+                    mark_func_arg(a)
+            elif target in _PALLAS_CALLS and node.args:
+                mark_func_arg(node.args[0])
+
+        # everything lexically nested in a traced function is traced
+        traced: set[ast.AST] = set()
+        for root in roots:
+            for sub in ast.walk(root):
+                if isinstance(sub, FUNC_NODES) or sub is root:
+                    traced.add(sub)
+        return traced
+
+    def in_traced_code(self, node: ast.AST) -> bool:
+        cur: ast.AST | None = node
+        while cur is not None:
+            if cur in self.traced_functions:
+                return True
+            cur = self.parents.get(cur)
+        return False

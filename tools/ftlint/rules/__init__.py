@@ -1,0 +1,38 @@
+"""ftlint rule registry.
+
+Each rule module exposes a ``RULE`` instance; the order here is the report
+order.  Rule catalogue and motivating bugs: docs/ftlint.md.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.ftlint.core import Finding
+from tools.ftlint.jaxctx import ModuleCtx
+
+
+class Rule:
+    """Base class: subclasses set ``code``/``name``/``invariant`` and
+    implement ``check``."""
+
+    code = "FTL000"
+    name = "abstract"
+    invariant = ""
+
+    def check(self, ctx: ModuleCtx) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleCtx, node: ast.AST, message: str) -> Finding:
+        return Finding(self.code, ctx.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), ctx.scope_of(node),
+                       message)
+
+
+from tools.ftlint.rules.ftl001_key_reuse import RULE as FTL001  # noqa: E402
+from tools.ftlint.rules.ftl002_nondeterminism import RULE as FTL002  # noqa: E402
+from tools.ftlint.rules.ftl003_policy_pytree import RULE as FTL003  # noqa: E402
+from tools.ftlint.rules.ftl004_bit_exact import RULE as FTL004  # noqa: E402
+from tools.ftlint.rules.ftl005_pallas import RULE as FTL005  # noqa: E402
+from tools.ftlint.rules.ftl006_jit_cache import RULE as FTL006  # noqa: E402
+
+ALL_RULES = (FTL001, FTL002, FTL003, FTL004, FTL005, FTL006)

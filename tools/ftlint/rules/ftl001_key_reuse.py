@@ -1,0 +1,225 @@
+"""FTL001 — PRNG key reuse.
+
+Invariant: a ``jax.random`` key feeds at most one sampling sink; every
+additional draw must go through a fresh derivation (``split`` /
+``fold_in``).  Reusing a key replays the exact same fault pattern (or
+sample) at two sites, which silently corrupts the fault-stream accounting
+the paper's reliability numbers rest on — the PR 3 replayed-fault-draw bug
+(back-to-back ``Engine.generate()`` calls re-drawing identical faults),
+generalized.
+
+Detection is an intraprocedural abstract interpretation per function
+scope:
+
+  * bindings: names assigned from key constructors/derivations
+    (``PRNGKey`` / ``key`` / ``split`` / ``fold_in`` / ...) and key-named
+    parameters;
+  * sinks: ``jax.random`` samplers plus the repo's key-consuming entry
+    points (``flip_bits``, ``inject_*_faults``, ``random_planes``,
+    ``protect_linear``, ``vision_batch``, ...);
+  * derivations never consume; ``if`` branches analyze independently and
+    merge; a sink inside a loop on a key created outside it (and not
+    re-derived per iteration) is the loop form of the same bug.
+
+Only plain-``Name`` keys are tracked — subscripted key arrays
+(``ks[i]``) are out of scope by design (index expressions vary per use).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+from tools.ftlint.jaxctx import FUNC_NODES, ModuleCtx
+from tools.ftlint.rules import Rule
+
+# jax.random entry points that *derive* keys rather than consuming them
+DERIVATIONS = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data",
+               "key_data", "clone"}
+
+# repo-local functions whose first positional key argument is a sink
+CONSUMERS = {
+    "flip_bits", "inject_output_faults", "inject_weight_faults",
+    "random_planes", "protect_linear", "ft_linear", "vision_batch",
+}
+
+KEY_PARAM_RE = re.compile(r"(^k$|^k[0-9]+$|key|rng)", re.IGNORECASE)
+
+
+@dataclasses.dataclass
+class _Binding:
+    depth: int                 # loop depth at (re)creation
+    consumed_line: int | None = None
+
+    def copy(self) -> "_Binding":
+        return _Binding(self.depth, self.consumed_line)
+
+
+class _Scope:
+    def __init__(self, rule, ctx: ModuleCtx, func):
+        self.rule, self.ctx = rule, ctx
+        self.bindings: dict[str, _Binding] = {}
+        self.depth = 0
+        self.reported: set[str] = set()
+        self.findings: list = []
+        if isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = func.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs
+                      + [x for x in (args.vararg, args.kwarg) if x]):
+                if KEY_PARAM_RE.search(a.arg):
+                    self.bindings[a.arg] = _Binding(0)
+
+    # ---------------------------------------------------------- classify --
+    def _sink_call(self, call: ast.Call) -> bool:
+        target = self.ctx.call_target(call)
+        if target is None:
+            return False
+        head, _, last = target.rpartition(".")
+        if head == "jax.random":
+            return last not in DERIVATIONS
+        return last in CONSUMERS or target in CONSUMERS
+
+    def _derivation_call(self, node: ast.AST) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        target = self.ctx.call_target(node)
+        return (target is not None and target.startswith("jax.random.")
+                and target.rpartition(".")[2] in DERIVATIONS)
+
+    # ----------------------------------------------------------- consume --
+    def _consume(self, name_node: ast.Name):
+        name = name_node.id
+        b = self.bindings.get(name)
+        if b is None:
+            return
+        if name in self.reported:
+            return
+        if b.consumed_line is not None:
+            self.reported.add(name)
+            self.findings.append(self.rule.finding(
+                self.ctx, name_node,
+                f"PRNG key '{name}' already consumed on line "
+                f"{b.consumed_line} is consumed again — derive a fresh key "
+                f"(jax.random.split / fold_in) before each draw"))
+        elif b.depth < self.depth:
+            self.reported.add(name)
+            self.findings.append(self.rule.finding(
+                self.ctx, name_node,
+                f"PRNG key '{name}' created outside this loop is consumed "
+                f"inside it — every iteration replays the same stream; "
+                f"fold the loop index in (jax.random.fold_in)"))
+        else:
+            b.consumed_line = name_node.lineno
+
+    def _visit_expr(self, node: ast.AST):
+        """Find sink calls in an expression, skipping nested functions."""
+        if isinstance(node, FUNC_NODES):
+            return
+        if isinstance(node, ast.Call):
+            if self._sink_call(node):
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Name):
+                        self._consume(arg)
+            for child in ast.iter_child_nodes(node):
+                self._visit_expr(child)
+            return
+        for child in ast.iter_child_nodes(node):
+            self._visit_expr(child)
+
+    # -------------------------------------------------------- statements --
+    def _bind_targets(self, targets, fresh: bool):
+        for t in targets:
+            if isinstance(t, ast.Name):
+                if fresh:
+                    self.bindings[t.id] = _Binding(self.depth)
+                    self.reported.discard(t.id)
+                else:
+                    self.bindings.pop(t.id, None)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                self._bind_targets(t.elts, fresh)
+
+    def run(self, body):
+        for stmt in body:
+            self._stmt(stmt)
+
+    def _stmt(self, stmt: ast.stmt):
+        if isinstance(stmt, FUNC_NODES) or isinstance(stmt, ast.ClassDef):
+            return                       # nested scopes analyzed separately
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._visit_expr(value)
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            self._bind_targets(targets, fresh=self._derivation_call(value))
+            return
+        if isinstance(stmt, ast.If):
+            self._visit_expr(stmt.test)
+            self._branch([stmt.body, stmt.orelse])
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._visit_expr(stmt.iter)
+            self._bind_targets([stmt.target], fresh=False)
+            self.depth += 1
+            self.run(stmt.body)
+            self.depth -= 1
+            self.run(stmt.orelse)
+            return
+        if isinstance(stmt, ast.While):
+            self._visit_expr(stmt.test)
+            self.depth += 1
+            self.run(stmt.body)
+            self.depth -= 1
+            self.run(stmt.orelse)
+            return
+        if isinstance(stmt, ast.Try):
+            self._branch([stmt.body] + [h.body for h in stmt.handlers])
+            self.run(stmt.orelse)
+            self.run(stmt.finalbody)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._visit_expr(item.context_expr)
+            self.run(stmt.body)
+            return
+        for child in ast.iter_child_nodes(stmt):
+            self._visit_expr(child)
+
+    def _branch(self, bodies):
+        """Analyze alternative branches independently, then merge: a key is
+        consumed after the If when any branch consumed it."""
+        snapshot = {k: v.copy() for k, v in self.bindings.items()}
+        merged: dict[str, _Binding] = {}
+        for body in bodies:
+            self.bindings = {k: v.copy() for k, v in snapshot.items()}
+            self.run(body)
+            for k, v in self.bindings.items():
+                cur = merged.get(k)
+                if cur is None:
+                    merged[k] = v.copy()
+                elif cur.consumed_line is None and v.consumed_line is not None:
+                    merged[k] = v.copy()
+        self.bindings = merged
+
+
+class KeyReuseRule(Rule):
+    code = "FTL001"
+    name = "prng-key-reuse"
+    invariant = ("every jax.random key feeds exactly one sink; reuse "
+                 "replays fault/sample streams and corrupts reliability "
+                 "accounting")
+
+    def check(self, ctx: ModuleCtx):
+        findings = []
+        scopes = [(None, ctx.tree.body)]
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scopes.append((node, node.body))
+        for func, body in scopes:
+            scope = _Scope(self, ctx, func)
+            scope.run(body)
+            findings.extend(scope.findings)
+        return findings
+
+
+RULE = KeyReuseRule()

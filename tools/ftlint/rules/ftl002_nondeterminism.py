@@ -1,0 +1,85 @@
+"""FTL002 — nondeterminism inside traced code.
+
+Invariant: everything under a JAX trace (``@jit`` bodies, ``lax.scan`` /
+``while_loop`` / ``cond`` bodies, Pallas kernels) must be a pure function
+of its traced inputs.  Host-side randomness (stdlib ``random``,
+``np.random``), wall-clock reads (``time.*``, ``datetime.now``), host
+syncs (``.item()``), and hash-order iteration over sets bake an arbitrary
+trace-time value into the compiled executable — the fault-injection
+protocol's determinism (same key, same faults, bit-exact replays) breaks
+without any test necessarily noticing.
+
+The serving parity suite (tests/test_serve_engine.py) only proves
+determinism for the paths it runs; this rule proves the absence of the
+nondeterminism *sources* everywhere.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.ftlint.jaxctx import ModuleCtx
+from tools.ftlint.rules import Rule
+
+# canonical dotted prefixes that are nondeterministic or host-syncing
+BANNED_PREFIXES = (
+    "random.",          # stdlib Mersenne Twister
+    "time.",            # wall clock
+    "numpy.random.",
+    "np.random.",
+    "secrets.",
+    "uuid.",
+)
+BANNED_EXACT = {
+    "datetime.datetime.now", "datetime.datetime.utcnow", "datetime.now",
+    "os.urandom",
+}
+
+
+def _is_set_expr(node: ast.AST, ctx: ModuleCtx) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return ctx.call_target(node) in ("set", "frozenset")
+    return False
+
+
+class NondeterminismRule(Rule):
+    code = "FTL002"
+    name = "nondeterminism-in-traced-code"
+    invariant = ("traced code is a pure function of its inputs: no host "
+                 "randomness, wall-clock, host syncs, or set-order "
+                 "iteration at trace time")
+
+    def check(self, ctx: ModuleCtx):
+        findings = []
+        for node in ast.walk(ctx.tree):
+            if not ctx.in_traced_code(node):
+                continue
+            if isinstance(node, ast.Call):
+                target = ctx.call_target(node)
+                if target and (target in BANNED_EXACT or any(
+                        target.startswith(p) for p in BANNED_PREFIXES)):
+                    findings.append(self.finding(
+                        ctx, node,
+                        f"call to '{target}' inside traced code bakes a "
+                        f"host-side/nondeterministic value into the "
+                        f"compiled executable"))
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr == "item" and not node.args):
+                    findings.append(self.finding(
+                        ctx, node,
+                        ".item() inside traced code forces a host sync "
+                        "(and fails under jit on abstract values)"))
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                it = node.iter
+                if _is_set_expr(it, ctx):
+                    findings.append(self.finding(
+                        ctx, it,
+                        "iteration over a set inside traced code: set order "
+                        "depends on PYTHONHASHSEED, so the traced program "
+                        "differs across processes — sort or use a "
+                        "tuple/list"))
+        return findings
+
+
+RULE = NondeterminismRule()

@@ -1,0 +1,155 @@
+"""FTL003 — protection-policy pytree discipline.
+
+Invariant (PR 1's core design): a ``ProtectionPolicy`` is a frozen
+dataclass pytree whose *only* dynamic leaf is ``ber``.  Everything else —
+layer structure, protection thresholds as metadata, seeds — is static, so
+the jitted datapath specializes on the treedef and BER sweeps vmap/scan
+over one executable.  Three ways code silently breaks this:
+
+  * mutating a frozen policy via ``object.__setattr__`` outside the
+    ``repro/ft`` package (bypasses ``tune()``'s field routing and the
+    frozen contract);
+  * registering a policy-like pytree with structural fields as data
+    leaves (every structural field on the trace = recompile-per-design is
+    gone AND cache keys collapse);
+  * (re)building policies inside traced code — ``.tune()`` /
+    ``dataclasses.replace`` / registry lookups — which rebuilds treedefs
+    per trace and moves structural metadata toward traced positions.
+
+The last class also covers "a structural field reaching a traced
+position": a structural policy field fed directly into a ``jnp`` / ``lax``
+array operation inside traced code is flagged (``ber``, and the sanctioned
+``FTCtx.dyn`` locals, are exempt — those are the designed dynamic paths).
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.ftlint.jaxctx import ModuleCtx
+from tools.ftlint.rules import Rule
+
+# every ProtectionPolicy field except the dynamic leaf `ber`
+STRUCTURAL_FIELDS = {
+    "s_th", "s_policy", "q_scale",                       # AlgorithmLayer
+    "recompute", "whole_layer_tmr", "temporal",          # ArchLayer
+    "dot_size", "data_reuse",
+    "ib_th", "nb_th", "pe_policy",                       # CircuitLayer
+    "weight_faults", "seed", "name",                     # policy top level
+}
+POLICY_COMPONENTS = {"algorithm", "arch", "circuit"}
+POLICY_NAME_RE = re.compile(r"(^|_)(policy|pol)(s|$|_)", re.IGNORECASE)
+POLICY_BUILDERS = {"get_policy", "from_ftconfig"}
+ALLOWED_PATHS = ("repro/ft/",)          # the package that owns the contract
+ARRAY_NAMESPACES = ("jax.numpy.", "jax.lax.", "jnp.")
+
+
+def _attr_chain(node: ast.Attribute) -> tuple[list[str], ast.AST]:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    return list(reversed(parts)), node
+
+
+class PolicyPytreeRule(Rule):
+    code = "FTL003"
+    name = "policy-pytree-discipline"
+    invariant = ("ProtectionPolicy pytrees keep ber as the only dynamic "
+                 "leaf; structural fields stay static metadata and frozen "
+                 "policies are only rebuilt via tune()/with_ber()")
+
+    def check(self, ctx: ModuleCtx):
+        findings = []
+        in_ft = any(p in ctx.path for p in ALLOWED_PATHS)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = ctx.call_target(node)
+
+            # (a) frozen-policy mutation outside repro/ft
+            if target == "object.__setattr__" and not in_ft:
+                findings.append(self.finding(
+                    ctx, node,
+                    "object.__setattr__ outside repro/ft: frozen "
+                    "protection policies must be rebuilt with "
+                    "policy.tune(...) / with_ber(...), never mutated"))
+                continue
+
+            # (b) policy pytree registration with structural data leaves
+            if target in ("jax.tree_util.register_dataclass",
+                          "jax.tree_util.register_pytree_node") and node.args:
+                cls = node.args[0]
+                cls_name = cls.id if isinstance(cls, ast.Name) else ""
+                if "Policy" in cls_name:
+                    data = next((kw.value for kw in node.keywords
+                                 if kw.arg == "data_fields"), None)
+                    if data is None and len(node.args) > 1:
+                        data = node.args[1]
+                    leaves = None
+                    if isinstance(data, (ast.List, ast.Tuple)):
+                        leaves = [e.value for e in data.elts
+                                  if isinstance(e, ast.Constant)]
+                    if leaves is not None and leaves != ["ber"]:
+                        findings.append(self.finding(
+                            ctx, node,
+                            f"policy pytree registered with data leaves "
+                            f"{leaves}: 'ber' must be the only dynamic "
+                            f"leaf (structural fields belong in "
+                            f"meta_fields)"))
+                continue
+
+            if not ctx.in_traced_code(node):
+                continue
+
+            # (c) policy (re)construction inside traced code
+            last = (target or "").rpartition(".")[2]
+            if last in POLICY_BUILDERS:
+                findings.append(self.finding(
+                    ctx, node,
+                    f"'{last}' inside traced code: registry lookups "
+                    f"rebuild policy objects/treedefs per trace — resolve "
+                    f"the policy on the host and pass it in as a pytree"))
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "tune"):
+                findings.append(self.finding(
+                    ctx, node,
+                    ".tune(...) inside traced code rebuilds the policy "
+                    "treedef per trace (and a traced override of a "
+                    "structural field would silently change the cache "
+                    "key) — tune on the host, trace only ber/dyn"))
+            elif target == "dataclasses.replace" and node.args:
+                root = node.args[0]
+                root_name = root.id if isinstance(root, ast.Name) else ""
+                if POLICY_NAME_RE.search(root_name):
+                    findings.append(self.finding(
+                        ctx, node,
+                        f"dataclasses.replace({root_name}, ...) inside "
+                        f"traced code rebuilds the policy structure per "
+                        f"trace — use with_ber/dyn for traced knobs"))
+
+            # (d) structural field used as an array operand in traced code
+            if target and target.startswith(ARRAY_NAMESPACES):
+                for arg in ast.walk(node):
+                    if not isinstance(arg, ast.Attribute) or arg is node.func:
+                        continue
+                    chain, root = _attr_chain(arg)
+                    if chain[-1] not in STRUCTURAL_FIELDS:
+                        continue
+                    root_name = root.id if isinstance(root, ast.Name) else ""
+                    policyish = (
+                        any(c in POLICY_COMPONENTS for c in chain[:-1])
+                        or POLICY_NAME_RE.search(root_name))
+                    if policyish:
+                        findings.append(self.finding(
+                            ctx, arg,
+                            f"structural policy field "
+                            f"'{'.'.join([root_name] + chain)}' reaches a "
+                            f"traced array position ({target}): only ber "
+                            f"(or FTCtx.dyn overrides) may ride the "
+                            f"trace — read structural fields into static "
+                            f"Python values instead"))
+        return findings
+
+
+RULE = PolicyPytreeRule()

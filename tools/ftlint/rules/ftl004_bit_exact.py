@@ -1,0 +1,141 @@
+"""FTL004 — bit-exactness of the integer fault datapath.
+
+Invariant: from quantization to the final rescale, the protected datapath
+is integer-only (int8 operands, int32/24-bit saturating accumulate, bit
+flips on two's-complement words).  That is what makes the Pallas kernels
+bit-exactly testable against ``ref.py``, the batched DSE oracle
+bit-identical to the looped path, and fault draws reproducible across
+backends.  One stray float cast or true division inside the datapath
+turns "bit-exact" into "close", and every parity test downstream goes
+flaky at the epsilon level.
+
+Scope: all functions in ``kernels/*/ref.py``, ``kernels/*/kernel.py`` and
+``core/faults.py``, plus the named integer-datapath functions in
+``ft/api.py``.  Exemptions encode the two sanctioned float boundaries:
+statements that apply a quantization *scale* (``scale`` / ``sx`` / ``sw``)
+and probability arithmetic (``ber`` / rates / thresholds) — probabilities
+are float by nature; data words are not.
+
+Also enforced here: integer matmuls must pin
+``preferred_element_type=jnp.int32`` — without it the accumulator dtype is
+backend-dependent, which is exactly the cross-backend drift the paper's
+24-bit-accumulator model exists to prevent.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.ftlint.jaxctx import FUNC_NODES, ModuleCtx
+from tools.ftlint.rules import Rule
+
+DATAPATH_FILE_RE = re.compile(
+    r"(kernels/[^/]+/(ref|kernel)\.py|core/faults\.py)$")
+# files where only named functions carry the integer-datapath contract
+DATAPATH_FUNCS_BY_FILE = {
+    "ft/api.py": {"_protect_reference"},
+}
+
+FLOAT_DTYPES = {
+    "jax.numpy.float16", "jax.numpy.float32", "jax.numpy.float64",
+    "jax.numpy.bfloat16", "numpy.float16", "numpy.float32",
+    "numpy.float64", "float",
+}
+FLOAT_PRODUCERS = {
+    "jax.numpy.mean", "jax.numpy.var", "jax.numpy.std", "jax.numpy.sqrt",
+    "jax.numpy.exp", "jax.numpy.log", "jax.numpy.log2", "jax.numpy.sin",
+    "jax.numpy.cos", "jax.numpy.tanh", "jax.numpy.true_divide",
+    "jax.lax.rsqrt", "jax.nn.softmax",
+}
+INT_MATMULS = {"jax.numpy.matmul", "jax.numpy.dot", "jax.lax.dot_general",
+               "jax.lax.dot"}
+# sanctioned float contexts: quantization scales and probabilities
+EXEMPT_NAME_RE = re.compile(
+    r"(^|_)(scale|sx|sw|ber|p|prob|rate|thresh|residual)(s?)($|_)",
+    re.IGNORECASE)
+
+
+def _stmt_of(ctx: ModuleCtx, node: ast.AST) -> ast.stmt | None:
+    cur = node
+    while cur is not None and not isinstance(cur, ast.stmt):
+        cur = ctx.parents.get(cur)
+    return cur
+
+
+def _stmt_is_exempt(ctx: ModuleCtx, node: ast.AST) -> bool:
+    stmt = _stmt_of(ctx, node)
+    if stmt is None:
+        return False
+    for sub in ast.walk(stmt):
+        if isinstance(sub, ast.Name) and EXEMPT_NAME_RE.search(sub.id):
+            return True
+        if isinstance(sub, ast.arg) and EXEMPT_NAME_RE.search(sub.arg):
+            return True
+    return False
+
+
+class BitExactRule(Rule):
+    code = "FTL004"
+    name = "integer-datapath-bit-exactness"
+    invariant = ("the protected datapath (quantize -> accumulate -> flip "
+                 "-> truncate) is integer-only; floats appear only at the "
+                 "scale/probability boundaries")
+
+    def _datapath_functions(self, ctx: ModuleCtx):
+        if DATAPATH_FILE_RE.search(ctx.path):
+            yield from (n for n in ast.walk(ctx.tree)
+                        if isinstance(n, FUNC_NODES))
+            return
+        for suffix, names in DATAPATH_FUNCS_BY_FILE.items():
+            if ctx.path.endswith(suffix):
+                for n in ast.walk(ctx.tree):
+                    if (isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                            and n.name in names):
+                        yield n
+
+    def check(self, ctx: ModuleCtx):
+        findings = []
+        seen: set[int] = set()
+        for func in self._datapath_functions(ctx):
+            fname = getattr(func, "name", "<lambda>")
+            if EXEMPT_NAME_RE.search(fname):
+                continue              # e.g. residual_ber: probability math
+            for node in ast.walk(func):
+                if id(node) in seen:
+                    continue
+                seen.add(id(node))
+                msg = self._classify(ctx, node)
+                if msg:
+                    findings.append(self.finding(ctx, node, msg))
+        return findings
+
+    def _classify(self, ctx: ModuleCtx, node: ast.AST) -> str | None:
+        if isinstance(node, ast.Call):
+            target = ctx.call_target(node)
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                dt = ctx.dotted(node.args[0])
+                if dt in FLOAT_DTYPES and not _stmt_is_exempt(ctx, node):
+                    return (f"float cast ({dt}) in the integer fault "
+                            f"datapath — bit-exactness across "
+                            f"backends/refs requires integer words until "
+                            f"the final scale")
+            elif target in FLOAT_PRODUCERS and not _stmt_is_exempt(ctx, node):
+                return (f"float-producing op '{target}' in the integer "
+                        f"fault datapath")
+            elif target in INT_MATMULS:
+                kwargs = {kw.arg for kw in node.keywords}
+                if "preferred_element_type" not in kwargs:
+                    return (f"'{target}' without preferred_element_type="
+                            f"jnp.int32: accumulator dtype becomes "
+                            f"backend-dependent, breaking kernel/ref "
+                            f"bit-exactness")
+        elif (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div)
+                and not _stmt_is_exempt(ctx, node)):
+            return ("true division in the integer fault datapath produces "
+                    "floats — use shifts/floordiv (the DLA truncates, it "
+                    "does not divide)")
+        return None
+
+
+RULE = BitExactRule()

@@ -1,0 +1,124 @@
+"""FTL005 — Pallas kernel structural rules.
+
+Invariant: every ``pl.pallas_call`` site in the repo follows the kernel
+contract the three existing kernels (``qmatmul``, ``fault_inject``,
+``protected_mm``) established, so the upcoming fused decode kernel
+inherits the checks:
+
+  * **divisibility guard** — BlockSpec block shapes must divide the
+    operand shapes (an assert/raise on ``% block == 0``, or explicit
+    padding before the call).  Pallas silently clips out-of-range blocks
+    in some modes; the rolling-cache shape-drift bug from PR 3 was this
+    class of silent misalignment.
+  * **interpret-mode fallback** — the call must thread an ``interpret=``
+    flag so the same program runs on CPU for the bit-exactness tests
+    against ``ref.py``; a hardcoded compiled-only kernel is untestable in
+    tier-1.
+  * **memory/compute-space annotations** — ``compiler_params`` with
+    ``dimension_semantics`` must be given (grid dims default to
+    "arbitrary" = fully sequential otherwise), and every scratch buffer
+    must name its memory space explicitly (``pltpu.VMEM(...)`` etc.).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.ftlint.jaxctx import ModuleCtx
+from tools.ftlint.rules import Rule
+
+MEMORY_SPACES = {"VMEM", "SMEM", "ANY", "SemaphoreType", "HBM", "CMEM"}
+
+
+def _has_divisibility_guard(func: ast.AST) -> bool:
+    for node in ast.walk(func):
+        test = None
+        if isinstance(node, ast.Assert):
+            test = node.test
+        elif isinstance(node, ast.If):
+            # if x % b: raise / if x % b != 0: raise
+            if any(isinstance(s, ast.Raise) for s in node.body):
+                test = node.test
+        if test is not None:
+            for sub in ast.walk(test):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod):
+                    return True
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = (fn.id if isinstance(fn, ast.Name)
+                    else fn.attr if isinstance(fn, ast.Attribute) else "")
+            if "pad" in name.lower():
+                return True
+    return False
+
+
+class PallasRule(Rule):
+    code = "FTL005"
+    name = "pallas-kernel-contract"
+    invariant = ("pallas_call sites guard BlockSpec divisibility, thread "
+                 "an interpret-mode fallback, and annotate "
+                 "memory/compute spaces explicitly")
+
+    def check(self, ctx: ModuleCtx):
+        findings = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if ctx.call_target(node) != "jax.experimental.pallas.pallas_call":
+                continue
+            kwargs = {kw.arg: kw.value for kw in node.keywords}
+
+            if "interpret" not in kwargs:
+                findings.append(self.finding(
+                    ctx, node,
+                    "pallas_call without an interpret= fallback: the "
+                    "kernel cannot run under the CPU bit-exactness tests "
+                    "against its ref.py oracle"))
+            elif isinstance(kwargs["interpret"], ast.Constant):
+                findings.append(self.finding(
+                    ctx, node,
+                    "pallas_call hardcodes interpret=<const>: thread a "
+                    "caller-controlled flag so tests interpret and "
+                    "deployments compile"))
+
+            cp = kwargs.get("compiler_params")
+            if cp is None:
+                findings.append(self.finding(
+                    ctx, node,
+                    "pallas_call without compiler_params: grid "
+                    "dimension_semantics default to sequential and the "
+                    "compute-space contract is implicit"))
+            elif isinstance(cp, ast.Call) and not any(
+                    kw.arg == "dimension_semantics" for kw in cp.keywords):
+                findings.append(self.finding(
+                    ctx, cp,
+                    "compiler_params without dimension_semantics: declare "
+                    "which grid dims are parallel vs arbitrary"))
+
+            scratch = kwargs.get("scratch_shapes")
+            if isinstance(scratch, (ast.List, ast.Tuple)):
+                for entry in scratch.elts:
+                    space = ""
+                    if isinstance(entry, ast.Call):
+                        fn = entry.func
+                        space = (fn.attr if isinstance(fn, ast.Attribute)
+                                 else fn.id if isinstance(fn, ast.Name)
+                                 else "")
+                    if space not in MEMORY_SPACES:
+                        findings.append(self.finding(
+                            ctx, entry,
+                            "scratch buffer without an explicit memory "
+                            "space (pltpu.VMEM / SMEM / ...): placement "
+                            "must not be left to the compiler default"))
+
+            func = ctx.enclosing_function(node)
+            if func is None or not _has_divisibility_guard(func):
+                findings.append(self.finding(
+                    ctx, node,
+                    "no BlockSpec divisibility guard in the enclosing "
+                    "function: assert operand shapes divide the block "
+                    "shapes (or pad) — misaligned blocks fail silently "
+                    "or clip"))
+        return findings
+
+
+RULE = PallasRule()

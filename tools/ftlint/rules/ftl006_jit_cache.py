@@ -1,0 +1,176 @@
+"""FTL006 — jit cache-key hazards.
+
+Invariant: every ``jax.jit`` cache key is cheap, hashable, and stable.
+The repo's serving/DSE throughput story rests on executables being
+compiled once and hit forever (the scan-fused decode loop, the
+treedef-keyed oracle cache); three patterns silently break that:
+
+  * **unhashable or array-valued static args** — a list/dict/set default
+    or an array annotation on a static-marked parameter either raises at
+    call time or, worse, retraces per call;
+  * **policies marked static** — a ``ProtectionPolicy`` is a pytree whose
+    treedef *is* the intended cache key; passing one via
+    ``static_argnums/names`` keys the cache on object hash instead, so
+    structurally-identical policies rebuild executables (treedefs
+    rebuilt per call, the PR 2 oracle-cache bug class);
+  * **jit created per iteration / per bound method** — ``jax.jit(...)``
+    inside a loop body, or on a bound-method attribute, creates a fresh
+    callable each time and retraces on every use.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.ftlint.jaxctx import ModuleCtx
+from tools.ftlint.rules import Rule
+
+POLICY_PARAM_RE = re.compile(r"(^|_)(policy|pol|policies)($|_)",
+                             re.IGNORECASE)
+ARRAY_ANNOT_RE = re.compile(r"\b(jax\.Array|jnp\.ndarray|np\.ndarray|"
+                            r"numpy\.ndarray|Array)\b")
+UNHASHABLE_NODES = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp)
+
+
+def _static_params(ctx: ModuleCtx, jit_call: ast.Call,
+                   func: ast.FunctionDef) -> list[ast.arg]:
+    """Parameters of ``func`` marked static in a jit call/decorator."""
+    args = func.args
+    pos = args.posonlyargs + args.args
+    byname = {a.arg: a for a in pos + args.kwonlyargs}
+    out: list[ast.arg] = []
+    for kw in jit_call.keywords:
+        if kw.arg == "static_argnames":
+            vals = (kw.value.elts if isinstance(kw.value,
+                                                (ast.Tuple, ast.List))
+                    else [kw.value])
+            for v in vals:
+                if isinstance(v, ast.Constant) and v.value in byname:
+                    out.append(byname[v.value])
+        elif kw.arg == "static_argnums":
+            vals = (kw.value.elts if isinstance(kw.value,
+                                                (ast.Tuple, ast.List))
+                    else [kw.value])
+            for v in vals:
+                if (isinstance(v, ast.Constant)
+                        and isinstance(v.value, int)
+                        and v.value < len(pos)):
+                    out.append(pos[v.value])
+    return out
+
+
+class JitCacheRule(Rule):
+    code = "FTL006"
+    name = "jit-cache-key-hazards"
+    invariant = ("jit cache keys are hashable, stable and policy-free: "
+                 "policies ride as pytrees (treedef = cache key), jit "
+                 "wrappers are created once")
+
+    def check(self, ctx: ModuleCtx):
+        findings = []
+        defs: dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.FunctionDef):
+                defs[node.name] = node
+
+        for node in ast.walk(ctx.tree):
+            # ---- decorator form: @partial(jax.jit, static_...) ----------
+            if isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) and self._wraps_jit(ctx, dec):
+                        findings.extend(
+                            self._check_static(ctx, dec, node))
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            if ctx.call_target(node) != "jax.jit":
+                continue
+
+            # ---- call form: jax.jit(fn, static_...) ----------------------
+            if node.args:
+                wrapped = node.args[0]
+                if isinstance(wrapped, ast.Name) and wrapped.id in defs:
+                    findings.extend(self._check_static(
+                        ctx, node, defs[wrapped.id]))
+                elif isinstance(wrapped, ast.Attribute):
+                    root = wrapped.value
+                    root_name = (root.id if isinstance(root, ast.Name)
+                                 else None)
+                    if root_name is None or root_name not in ctx.aliases:
+                        findings.append(self.finding(
+                            ctx, node,
+                            f"jax.jit on attribute "
+                            f"'{ast.unparse(wrapped)}': a bound method is "
+                            f"a fresh function object per access, so the "
+                            f"jit cache never hits — jit a module-level "
+                            f"function or wrap once in __init__"))
+
+            # ---- jit-per-iteration ---------------------------------------
+            if self._in_loop(ctx, node):
+                findings.append(self.finding(
+                    ctx, node,
+                    "jax.jit(...) inside a loop body creates a new jitted "
+                    "callable (and trace) per iteration — hoist the "
+                    "wrapper out of the loop"))
+        return findings
+
+    # ------------------------------------------------------------ helpers --
+    def _wraps_jit(self, ctx: ModuleCtx, call: ast.Call) -> bool:
+        target = ctx.call_target(call)
+        if target == "jax.jit":
+            return True
+        return (target in ("functools.partial", "partial") and call.args
+                and ctx.dotted(call.args[0]) == "jax.jit")
+
+    def _in_loop(self, ctx: ModuleCtx, node: ast.AST) -> bool:
+        cur = ctx.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.For, ast.While, ast.AsyncFor)):
+                return True
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return False
+            cur = ctx.parents.get(cur)
+        return False
+
+    def _check_static(self, ctx: ModuleCtx, jit_call: ast.Call,
+                      func: ast.FunctionDef):
+        findings = []
+        params = _static_params(ctx, jit_call, func)
+        args = func.args
+        pos = args.posonlyargs + args.args
+        defaults = dict(zip([a.arg for a in pos[len(pos)
+                                                - len(args.defaults):]],
+                            args.defaults))
+        defaults.update({a.arg: d for a, d in zip(args.kwonlyargs,
+                                                  args.kw_defaults) if d})
+        for p in params:
+            if POLICY_PARAM_RE.search(p.arg):
+                findings.append(self.finding(
+                    ctx, p,
+                    f"static arg '{p.arg}' in jitted '{func.name}' looks "
+                    f"like a protection policy: policies are pytrees — "
+                    f"pass them dynamically so the treedef (not object "
+                    f"hash) keys the executable cache"))
+            d = defaults.get(p.arg)
+            if d is not None and isinstance(d, UNHASHABLE_NODES):
+                findings.append(self.finding(
+                    ctx, p,
+                    f"static arg '{p.arg}' in jitted '{func.name}' has an "
+                    f"unhashable default ({type(d).__name__.lower()}): "
+                    f"jit static args must be hashable — use a tuple/"
+                    f"frozenset or make it dynamic"))
+            ann = p.annotation
+            if ann is not None and ARRAY_ANNOT_RE.search(
+                    ast.unparse(ann)):
+                findings.append(self.finding(
+                    ctx, p,
+                    f"static arg '{p.arg}' in jitted '{func.name}' is "
+                    f"annotated as an array: array-valued static args "
+                    f"retrace per value (or fail to hash) — pass arrays "
+                    f"dynamically"))
+        return findings
+
+
+RULE = JitCacheRule()
