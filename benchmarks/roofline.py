@@ -155,6 +155,63 @@ def roofline_row(arch: str, shape: str, mesh: str = "single"):
     )
 
 
+def fused_decode_bytes(M: int, K: int, N: int, *, weight_faults: bool = True,
+                       dppu: bool = True, per_row: bool = False) -> dict:
+    """Analytic HBM bytes per protected decode-step linear (M, K) x (K, N):
+    the composed three-dispatch pipeline vs the fused decode kernel.
+
+    Composed (``kernels/fault_inject`` -> ``kernels/protected_mm``), per
+    dispatch boundary everything round-trips through HBM:
+
+      * weight fault injection: read int8 weights (K*N) + 8 uint32 random
+        planes per element (32*K*N), write the faulty int8 copy (K*N);
+      * protected matmul: read int8 activations (M*K) + the faulty weights
+        again (K*N) + two 8-plane uint32 stacks for the output/DPPU fault
+        streams (2 * 32*M*N) + the importance mask (4*N), write int8 out.
+
+    Fused (one ``pallas_call``): activations + weights are read ONCE, the
+    fault streams arrive as *packed* int32 flip words (4 bytes/element
+    instead of 32), no intermediate tensor ever leaves VMEM, and the
+    selected truncation LSB comes back as an (M, 1) int32 column.  Per-row
+    weight faults add an (M, K, N) packed flip-word tensor (the per-request
+    faulty-weight views are materialized nowhere).
+
+    Arithmetic intensity uses the int-MAC count 2*M*K*N (DPPU recompute
+    doubles it); decode is deeply memory-bound, so bytes saved translate
+    ~1:1 into step time on the HBM roofline.
+    """
+    macs = 2.0 * M * K * N * (2 if dppu else 1)
+    composed = (M * K + 2 * K * N + M * N          # int8 x, w x2, out
+                + 4 * N                            # protect/importance mask
+                + 64.0 * M * N)                    # 2 x 8 uint32 planes
+    if weight_faults:
+        composed += 32.0 * K * N + K * N           # weight planes + copy
+    fused = (M * K + K * N + M * N + 4 * M        # int8 x, w, out; t column
+             + 4.0 * M * N                         # packed output flip words
+             + 4 * N)                              # importance row
+    if dppu:
+        fused += 4.0 * M * N                       # packed DPPU flip words
+    if weight_faults:
+        if per_row:
+            fused += 4.0 * M * K * N               # per-row weight flip words
+        else:
+            fused += K * N                         # shared faulty copy read
+    return dict(M=M, K=K, N=N, weight_faults=weight_faults, dppu=dppu,
+                per_row=per_row, int_macs=macs,
+                composed_bytes=composed, fused_bytes=fused,
+                bytes_ratio=round(composed / fused, 2),
+                composed_ai=round(macs / composed, 3),
+                fused_ai=round(macs / fused, 3),
+                ai_uplift=round((macs / fused) / (macs / composed), 2))
+
+
+def fused_decode_table(shapes=((8, 2048, 2048), (8, 2048, 8192),
+                               (8, 8192, 2048))):
+    """Fused-vs-composed roofline movement over representative decode
+    shapes (M = batch rows, K x N = projection)."""
+    return [fused_decode_bytes(M, K, N) for M, K, N in shapes]
+
+
 def full_table(mesh: str = "single"):
     rows = []
     for arch in ARCHS:

@@ -21,6 +21,7 @@ def _benchmarks():
     from benchmarks import paper_figs as F
     from benchmarks import roofline as R
     from benchmarks.dse_batch import dse_batched_vs_sequential
+    from benchmarks.fused_bench import fused_vs_composed
     from benchmarks.serve_bench import serve_scan_vs_python
 
     def roofline_single():
@@ -44,6 +45,7 @@ def _benchmarks():
         "fig14_bit_area": F.fig14_bit_area,
         "fig15_table2_dse": F.fig15_table2_dse,
         "dse_batched_vs_sequential": dse_batched_vs_sequential,
+        "fused_vs_composed": fused_vs_composed,
         "serve_scan_vs_python": serve_scan_vs_python,
         "roofline_single_pod": roofline_single,
         "roofline_multi_pod": roofline_multi,

@@ -23,6 +23,37 @@ def _flip_plane(key, shape, p):
     return jax.random.bernoulli(key, p, shape)
 
 
+def flip_word(key: jax.Array, shape, ber: float, bits: int,
+              protected_mask: int | jax.Array = 0) -> jax.Array:
+    """Draw the packed XOR word of a bit-flip event: bit ``b`` of the result
+    is set iff bit ``b`` of a `shape`-shaped value flips under BER `ber`.
+
+    This is the randomness of :func:`flip_bits` factored out from the data:
+    the draws (key schedule, plane shapes, residual-rate handling) are
+    identical, so ``x ^ flip_word(...)`` == ``flip_bits(key, x, ...)`` up to
+    sign extension.  The fused decode kernel consumes these packed words
+    (8 planes in one int32) instead of raw per-bit planes.
+    """
+    static_ber = not isinstance(ber, jax.core.Tracer)
+    if static_ber:
+        ber = float(ber)
+    keys = jax.random.split(key, 2 * bits)
+    flips = jnp.zeros(shape, jnp.int32)
+    prot = jnp.broadcast_to(jnp.asarray(protected_mask, jnp.int32), shape)
+    r = residual_ber(ber)
+    for b in range(bits):
+        bitval = 1 << b
+        is_prot = (prot & bitval) != 0
+        f_raw = _flip_plane(keys[2 * b], shape, ber)
+        if static_ber and r == 0:
+            f_res = jnp.zeros(shape, bool)
+        else:
+            f_res = _flip_plane(keys[2 * b + 1], shape, r)
+        f = jnp.where(is_prot, f_res, f_raw)
+        flips = flips | jnp.where(f, bitval, 0)
+    return flips
+
+
 def flip_bits(key: jax.Array, x: jax.Array, ber: float, bits: int,
               protected_mask: int | jax.Array = 0,
               signed: bool = True) -> jax.Array:
@@ -37,27 +68,10 @@ def flip_bits(key: jax.Array, x: jax.Array, ber: float, bits: int,
     # `ber` may be a traced value (policy pytrees put it on a vmap/scan axis);
     # the bernoulli draws are identical either way, so static configs stay
     # bit-exact while traced ones share one compiled executable.
-    static_ber = not isinstance(ber, jax.core.Tracer)
-    if static_ber:
-        ber = float(ber)
     x = x.astype(jnp.int32)
     mask_all = (1 << bits) - 1
     ux = x & mask_all
-    keys = jax.random.split(key, 2 * bits)
-    flips = jnp.zeros_like(ux)
-    prot = jnp.broadcast_to(jnp.asarray(protected_mask, jnp.int32), ux.shape)
-    r = residual_ber(ber)
-    for b in range(bits):
-        bitval = 1 << b
-        is_prot = (prot & bitval) != 0
-        f_raw = _flip_plane(keys[2 * b], ux.shape, ber)
-        if static_ber and r == 0:
-            f_res = jnp.zeros(ux.shape, bool)
-        else:
-            f_res = _flip_plane(keys[2 * b + 1], ux.shape, r)
-        f = jnp.where(is_prot, f_res, f_raw)
-        flips = flips | jnp.where(f, bitval, 0)
-    ux = ux ^ flips
+    ux = ux ^ flip_word(key, ux.shape, ber, bits, protected_mask)
     if signed:  # sign-extend back
         sign = 1 << (bits - 1)
         ux = jnp.where((ux & sign) != 0, ux - (1 << bits), ux)
@@ -70,6 +84,16 @@ def top_bits_mask(n_top: int, bits: int) -> int:
     return ((1 << n_top) - 1) << (bits - n_top)
 
 
+def protect_mask(protect_top: int | jax.Array, bits: int = 8):
+    """Per-channel bitmask of TMR-protected bits from a protected-top-bits
+    count (int, or an int32 array for per-channel IB_TH/NB_TH selection)."""
+    if isinstance(protect_top, int):
+        return top_bits_mask(protect_top, bits)
+    p = jnp.clip(jnp.asarray(protect_top).astype(jnp.int32), 0, bits)
+    mask = ((1 << p) - 1) << (bits - p)
+    return jnp.where(p > 0, mask, 0)
+
+
 def inject_output_faults(key, yq: jax.Array, ber: float, *,
                          bits: int = 8,
                          protect_top: int | jax.Array = 0) -> jax.Array:
@@ -79,12 +103,7 @@ def inject_output_faults(key, yq: jax.Array, ber: float, *,
     int32 array (last-dim broadcast) so important neurons (IB_TH) and ordinary
     neurons (NB_TH) get different protection — the paper's bit dimension.
     """
-    if isinstance(protect_top, (int,)):
-        mask = top_bits_mask(protect_top, bits)
-    else:
-        p = jnp.clip(protect_top.astype(jnp.int32), 0, bits)
-        mask = ((1 << p) - 1) << (bits - p)
-        mask = jnp.where(p > 0, mask, 0)
+    mask = protect_mask(protect_top, bits)
     return flip_bits(key, yq, ber, bits, protected_mask=mask)
 
 

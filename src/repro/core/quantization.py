@@ -58,10 +58,17 @@ def choose_trunc_lsb(acc_absmax: jax.Array, out_bits: int = OUT_BITS,
     the accumulator's dynamic range, subject to the constraint t >= q_scale.
 
     t = max(q_scale, ceil(log2(absmax + 1)) - (out_bits - 1))   (sign bit kept)
+
+    Computed in pure integer math: ceil(log2(a + 1)) == bit_length(a) for
+    a >= 1, and bit_length is a popcount over threshold comparisons.  This
+    keeps the datapath integer-only end to end (FTL004) and lets the fused
+    decode kernel derive the identical t from the accumulator in-kernel.
     """
-    # number of magnitude bits needed
-    need = jnp.ceil(jnp.log2(jnp.maximum(acc_absmax.astype(jnp.float32), 1.0) + 1.0))
-    t = jnp.maximum(need - (out_bits - 1), 0).astype(jnp.int32)
+    a = jnp.maximum(jnp.abs(acc_absmax).astype(jnp.int32), 1)
+    # number of magnitude bits needed: bit_length(a)
+    thresholds = jnp.asarray([1 << b for b in range(acc_bits)], jnp.int32)
+    need = jnp.sum(a[..., None] >= thresholds, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(need - (out_bits - 1), 0)
     t = jnp.clip(t, q_scale, acc_bits - out_bits)
     return t
 

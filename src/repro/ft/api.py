@@ -15,9 +15,19 @@ Two backends compute the same FlexHyCA semantics:
     The kernel models ECC-protected weight SRAM, so ``policy.weight_faults``
     does not apply on this path.
 
-Both backends agree bit-exactly at BER 0 and draw from independent RNG
-streams otherwise (the kernel uses pre-generated uint32 planes; the
-reference uses per-bit bernoulli draws).
+  * ``backend="fused"`` — the fused decode kernel
+    (``repro.kernels.fused_decode``): the *same* key schedule and fault
+    draws as the reference backend, packed into int32 flip words and
+    consumed by one Pallas pass (matmul + saturate + in-kernel truncation
+    LSB + XOR + DPPU select).  Bit-identical to ``reference`` for every
+    registry policy — global or (M, 2) per-row keys, weight faults
+    included (per-row weight faults give each batch row an independent
+    faulty-weight view), traced ``dyn`` overrides supported.  This is the
+    serving hot-path backend; see ``docs/kernels.md``.
+
+Reference and fused agree bit-exactly at any BER; pallas agrees at BER 0
+and draws from an independent RNG stream otherwise (it uses pre-generated
+uint32 planes rather than the packed flip words).
 """
 from __future__ import annotations
 
@@ -30,7 +40,7 @@ from repro.core import faults
 from repro.core import quantization as Q
 from repro.ft.policy import ProtectionPolicy
 
-BACKENDS = ("reference", "pallas")
+BACKENDS = ("reference", "fused", "pallas")
 
 
 def calibrate_t(x, w, q_scale: int = 0) -> int:
@@ -54,37 +64,45 @@ def protect_linear(key: jax.Array, x: jax.Array, w: jax.Array,
       key: one PRNG key, or an (M, 2) batch of keys — one per row of the
         flattened x — for *per-row* independent fault streams (and per-row
         quantization scales), so a serving batch's reliability accounting
-        stays per-request.  Per-row mode is reference-backend only and
-        requires ``policy.weight_faults=False`` (weights are shared across
-        rows, so per-row weight faults cannot be independent).
+        stays per-request.  Per-row mode is supported by the reference and
+        fused backends; with ``policy.weight_faults`` each row additionally
+        sees its own independently drawn faulty-weight view.
       x: (..., K) activations.  w: (K, N) weights.
       policy: a :class:`ProtectionPolicy` (see ``repro.ft.get_policy``).
       important: (N,) bool mask of important output channels (Algorithm 1);
         consumed only by recompute policies.
       layer_protected: for whole-layer-TMR policies (arch/alg) — whether this
         layer is in the protected (sensitive) set.
-      backend: "reference" | "pallas".
+      backend: "reference" | "fused" | "pallas".
       t: truncation LSB for the pallas backend (calibrated from x/w if None).
-      interpret: run the pallas kernel in interpret mode (CPU).
+      interpret: run the pallas/fused kernel in interpret mode (CPU).
       dyn: optional mapping of *traced* overrides for the policy's numeric
         protection knobs (``ib_th`` / ``nb_th`` / ``q_scale``).  The static
         values in ``policy`` are metadata the executable specializes on; a
         ``dyn`` entry moves that knob onto the trace so a batch of candidate
         designs with different knob values shares one compiled executable
-        (the batched DSE oracle — see ``repro.core.evaluate``).  Reference
-        backend only.
+        (the batched DSE oracle — see ``repro.core.evaluate``).  Supported
+        by the reference and fused backends (the fused kernel takes
+        ``q_scale`` as a scalar operand and folds ``ib_th``/``nb_th`` into
+        the flip-word draws).
     Returns (..., N) float32.
     """
     if backend == "reference":
         return _protect_reference(key, x, w, policy, important,
                                   layer_protected, dyn)
+    if backend == "fused":
+        from repro.kernels.fused_decode.ops import fused_protect_linear
+        return fused_protect_linear(key, x, w, policy, important,
+                                    layer_protected=layer_protected,
+                                    dyn=dyn, interpret=interpret)
     if getattr(key, "ndim", 1) == 2:
         raise ValueError("per-row key batches are only supported by "
-                         "backend='reference'")
+                         "backend='reference' or backend='fused'")
     if dyn:
         raise ValueError("dyn knob overrides are only supported by "
-                         "backend='reference' (the pallas kernel takes its "
-                         "protection knobs statically)")
+                         "backend='reference' or backend='fused' (the "
+                         "pallas kernel takes its protection knobs "
+                         "statically)")
     if backend == "pallas":
         return _protect_pallas(key, x, w, policy, important,
                                layer_protected=layer_protected, t=t,
@@ -111,18 +129,15 @@ def _protect_reference(key, x, w, policy: ProtectionPolicy, important,
     own activation-quantization scale, truncation LSB and fault draws, so
     row b's output is a function of row b's input and key only — batch
     composition cannot perturb another request's fault stream (the
-    continuous-batching scheduler's reliability contract).
+    continuous-batching scheduler's reliability contract).  With
+    ``policy.weight_faults`` that extends to the weights: each row sees the
+    shared weight matrix through its own independently drawn flip words, as
+    if the DLA re-read a freshly faulted weight SRAM per request.
     """
     orig_shape = x.shape
     x2 = x.reshape(-1, orig_shape[-1])
     per_row = getattr(key, "ndim", 1) == 2
     if per_row:
-        if policy.weight_faults:
-            raise ValueError(
-                "per-row key batches need policy.weight_faults=False: "
-                "weights are shared across rows, so per-row weight-fault "
-                "streams cannot be independent (tune(weight_faults=False) "
-                "models the DLA's ECC-protected weight SRAM)")
         ks = jax.vmap(lambda k: jax.random.split(k, 3))(key)   # (M, 3, 2)
         kw, ka, kd = ks[:, 0], ks[:, 1], ks[:, 2]
     else:
@@ -136,9 +151,21 @@ def _protect_reference(key, x, w, policy: ProtectionPolicy, important,
 
     xq, sx = Q.quantize(x2, axis=1 if per_row else None)
     wq, sw = Q.quantize(w)
-    wq_f = (faults.inject_weight_faults(kw, wq, policy.ber)
-            if policy.weight_faults else wq)
-    acc = Q.saturate(jnp.matmul(xq, wq_f, preferred_element_type=jnp.int32))
+    if policy.weight_faults and per_row:
+        # each row's private faulty-weight view: (M, 2) kw keys -> (M, K, N)
+        # packed flip words applied to the shared weights
+        wfl = jax.vmap(lambda k: faults.flip_word(
+            k, wq.shape, policy.ber, Q.OUT_BITS))(kw)
+        uw = (wq[None, :, :] & ((1 << Q.OUT_BITS) - 1)) ^ wfl
+        wq_f = jnp.where((uw & (1 << (Q.OUT_BITS - 1))) != 0,
+                         uw - (1 << Q.OUT_BITS), uw)
+        acc = jax.vmap(lambda a, b: jnp.matmul(
+            a, b, preferred_element_type=jnp.int32))(xq, wq_f)
+    else:
+        wq_f = (faults.inject_weight_faults(kw, wq, policy.ber)
+                if policy.weight_faults else wq)
+        acc = jnp.matmul(xq, wq_f, preferred_element_type=jnp.int32)
+    acc = Q.saturate(acc)
     absmax = (jnp.max(jnp.abs(acc), axis=1, keepdims=True) if per_row
               else jnp.max(jnp.abs(acc)))
     t = Q.choose_trunc_lsb(absmax, q_scale=q_scale)

@@ -1,0 +1,95 @@
+"""Composed-op oracle for the fused inject→protect→qmatmul decode kernel.
+
+This is the `fault_inject ∘ protect ∘ qmatmul` composition written as plain
+jnp over the *same operands the kernel sees*: quantized integers plus
+pre-drawn packed flip words (bit ``b`` of a flip word = flip event for bit
+``b`` — see ``repro.core.faults.flip_word``).  All fault randomness is
+resolved before this function; everything inside is deterministic integer
+math, which is what makes kernel-vs-reference parity a bit-exact equality
+instead of a tolerance check.
+
+The datapath (identical to ``ft.api._protect_reference`` after its own
+quantize/key-schedule stage):
+
+  int8 x int8 → int32 accumulate → 24-bit saturate → truncation LSB ``t``
+  from the accumulator's integer bit-length (Q_scale-constrained) → 8-bit
+  round-to-nearest window → XOR output flip word → sign-extend
+  [→ DPPU clean recompute, same ``t``, own flip word, select important]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+ACC_BITS = Q.ACC_BITS
+OUT_BITS = Q.OUT_BITS
+
+
+def sign_extend8(u: jax.Array, bits: int = OUT_BITS) -> jax.Array:
+    """Reinterpret the low `bits` of int32 `u` as two's complement."""
+    sign = 1 << (bits - 1)
+    return jnp.where((u & sign) != 0, u - (1 << bits), u)
+
+
+def faulty_weights(wq: jax.Array, wflips: jax.Array,
+                   bits: int = OUT_BITS) -> jax.Array:
+    """Apply packed per-row weight flip words: (K, N) x (M, K, N) → (M, K, N)."""
+    uw = (wq[None, :, :].astype(jnp.int32) & ((1 << bits) - 1)) ^ wflips
+    return sign_extend8(uw, bits)
+
+
+def fused_ref(xq: jax.Array, wq: jax.Array, oflips: jax.Array, q_scale, *,
+              per_row: bool = False,
+              wflips: jax.Array | None = None,
+              wq_clean: jax.Array | None = None,
+              dflips: jax.Array | None = None,
+              imp: jax.Array | None = None,
+              acc_bits: int = ACC_BITS, out_bits: int = OUT_BITS):
+    """The fused kernel's exact contract, as composed reference ops.
+
+    Args:
+      xq: (M, K) int8-valued activations.  wq: (K, N) int8-valued weights —
+        already weight-faulted in shared-fault mode.
+      oflips: (M, N) int32 packed output flip words (protection already
+        folded into the draw via the protected mask).
+      q_scale: minimum truncation LSB (int or traced int32 — the dyn leaf).
+      per_row: per-row truncation LSB (serving batches) vs one global t.
+      wflips: optional (M, K, N) packed *per-row* weight flip words; when
+        given, row m sees its own faulty weight matrix (continuous-batching
+        weight faults — each request keeps an independent stream).
+      wq_clean: clean weights for the DPPU recompute when `wq` is faulty
+        (shared-fault mode); defaults to `wq`.
+      dflips/imp: DPPU flip words (M, N) and important-channel mask (N,);
+        both present ⇔ the policy recomputes important channels.
+    Returns:
+      (yq, t): int32 int8-valued outputs (M, N) and the truncation LSB —
+      (M, 1) when per_row else scalar.
+    """
+    xq = xq.astype(jnp.int32)
+    wq = wq.astype(jnp.int32)
+    if wflips is not None:
+        wf = faulty_weights(wq, wflips, out_bits)
+        acc = jax.vmap(lambda a, b: jnp.matmul(
+            a, b, preferred_element_type=jnp.int32))(xq, wf)
+    else:
+        acc = jnp.matmul(xq, wq, preferred_element_type=jnp.int32)
+    acc = Q.saturate(acc, acc_bits)
+    absmax = (jnp.max(jnp.abs(acc), axis=1, keepdims=True) if per_row
+              else jnp.max(jnp.abs(acc)))
+    t = Q.choose_trunc_lsb(absmax, out_bits=out_bits, q_scale=q_scale,
+                           acc_bits=acc_bits)
+    yq = Q.truncate_acc(acc, t, out_bits)
+    mask_all = (1 << out_bits) - 1
+    y = sign_extend8((yq & mask_all) ^ oflips, out_bits)
+
+    if dflips is not None:
+        wc = wq if wq_clean is None else wq_clean.astype(jnp.int32)
+        acc_d = Q.saturate(jnp.matmul(xq, wc,
+                                      preferred_element_type=jnp.int32),
+                           acc_bits)
+        yq_d = Q.truncate_acc(acc_d, t, out_bits)
+        y_d = sign_extend8((yq_d & mask_all) ^ dflips, out_bits)
+        y = jnp.where(imp[None, :] != 0, y_d, y)
+    return y, t

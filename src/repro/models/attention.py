@@ -165,7 +165,31 @@ def apply(p, x, *, cfg, run, kind, positions, probe=None, ftc=None,
     q = ac(q, "dp", None, "tp", None)
 
     new_cache = cache
-    if mode == "decode" and not cross:
+    if mode == "decode" and not cross and "bt" in cache:
+        # paged cache: the slot's logical position maps through the block
+        # table to a physical row of the shared block pool.  Rows whose
+        # table entry is the trash block (id 0 — evicted/idle slots) write
+        # garbage nobody reads; rows with real blocks own them exclusively.
+        pool_k, pool_v, bt = cache["k"], cache["v"], cache["bt"]
+        P, bs = pool_k.shape[0], pool_k.shape[1]
+        eff_cap = bt.shape[1] * bs
+        pos = positions[:, 0]                                        # (B,)
+        slot = pos % window if window else jnp.minimum(pos, eff_cap - 1)
+        fi = bt[jnp.arange(B), slot // bs] * bs + slot % bs          # (B,)
+        kp = pool_k.reshape(P * bs, KH, Dh).at[fi].set(k[:, 0])
+        vp = pool_v.reshape(P * bs, KH, Dh).at[fi].set(v[:, 0])
+        new_cache = {"k": kp.reshape(pool_k.shape),
+                     "v": vp.reshape(pool_v.shape), "bt": bt}
+        # gather this row's blocks back into slot order and run the same
+        # count-masked decode attention as the dense layout (bit-identical:
+        # masked tail slots never contribute)
+        flat = (bt[:, :, None] * bs
+                + jnp.arange(bs)[None, None]).reshape(B, eff_cap)
+        kc = kp[flat]                                    # (B, C, KH, Dh)
+        vc = vp[flat]
+        n_valid = jnp.minimum(pos + 1, window if window else eff_cap)
+        o = _decode_attn(q, kc, vc, n_valid, cap=cfg.attn_softcap)
+    elif mode == "decode" and not cross:
         # write this token into the (possibly rolling) cache.  positions may
         # differ per batch row (continuous batching: every slot serves its
         # own request), so the write is a per-row dynamic update and the
@@ -180,7 +204,10 @@ def apply(p, x, *, cfg, run, kind, positions, probe=None, ftc=None,
         n_valid = jnp.minimum(pos + 1, cap_len)                      # (B,)
         o = _decode_attn(q, kc, vc, n_valid, cap=cfg.attn_softcap)
     elif mode == "decode" and cross:
-        o = _decode_attn(q, cache["ck"], cache["cv"], cache["ck"].shape[1],
+        # per-row "cn" counts (continuous batching: each slot's encoder
+        # context has its own length) fall back to the full buffer length
+        o = _decode_attn(q, cache["ck"], cache["cv"],
+                         cache.get("cn", cache["ck"].shape[1]),
                          cap=cfg.attn_softcap)
     else:
         o = chunked_attention(q, k, v, causal=not cross, window=window,
@@ -227,6 +254,22 @@ def _build_cache(k, v, window):
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     return {"k": k, "v": v}
+
+
+def init_paged_cache(cfg, kind, batch, cap_len, block_size, n_blocks, dtype):
+    """Paged KV cache for one attention layer: a pool of `n_blocks` physical
+    blocks of `block_size` token slots, plus a per-row block table mapping
+    logical slots to blocks.  Block 0 is the trash block — every table entry
+    starts there, and evicted slots are pointed back at it, so idle rows'
+    decode writes land in memory nobody reads.  Rolling (window) layers keep
+    the same slot map as the dense layout (position p at slot p % window),
+    just block-indexed; their table is window-sized."""
+    window = cfg.window if kind == "L" else 0
+    cap = window if window else cap_len
+    width = -(-cap // block_size)                    # ceil
+    shp = (n_blocks, block_size, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+            "bt": jnp.zeros((batch, width), jnp.int32)}
 
 
 def init_cache(cfg, kind, batch, cap_len, dtype):

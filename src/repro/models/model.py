@@ -112,21 +112,39 @@ class Model:
         return new_caches, T.last_logits(params, cfg, h)
 
     # -------------------------------------------------------------- specs --
-    def init_cache(self, batch: int, seq_len: int):
-        """Zero caches sized for decoding at context length seq_len."""
+    def init_cache(self, batch: int, seq_len: int, *, paged=None,
+                   enc_len: int | None = None):
+        """Zero caches sized for decoding at context length seq_len.
+
+        ``paged=(block_size, n_blocks)`` switches attention layers to the
+        paged layout (block pool + per-row block table — see
+        ``attention.init_paged_cache``); recurrent/SSM state and
+        cross-attention buffers stay dense per-slot rows.  ``enc_len`` sizes
+        the cross-attention buffers (enc-dec only; defaults to seq_len) and
+        adds a per-row ``cn`` valid-length so slots can hold encoder
+        contexts of different lengths (passing it opts into per-row
+        cross-attention masking — the serving scheduler's layout)."""
         cfg, run = self.cfg, self.run
         dtype = dtype_of(run.compute_dtype)
+        e_len = enc_len if enc_len is not None else seq_len
 
         def layer_cache(kind):
             if kind in ("G", "L"):
-                c = attention.init_cache(cfg, kind, batch, seq_len, dtype)
+                if paged is not None:
+                    bs, n_blocks = paged
+                    c = attention.init_paged_cache(cfg, kind, batch, seq_len,
+                                                   bs, n_blocks, dtype)
+                else:
+                    c = attention.init_cache(cfg, kind, batch, seq_len, dtype)
                 if cfg.enc_dec:
-                    c = {"attn": c, "cross": {
-                        "ck": jnp.zeros((batch, seq_len, cfg.n_kv_heads,
+                    cross = {
+                        "ck": jnp.zeros((batch, e_len, cfg.n_kv_heads,
                                          cfg.d_head), dtype),
-                        "cv": jnp.zeros((batch, seq_len, cfg.n_kv_heads,
-                                         cfg.d_head), dtype)}}
-                    return c
+                        "cv": jnp.zeros((batch, e_len, cfg.n_kv_heads,
+                                         cfg.d_head), dtype)}
+                    if enc_len is not None:
+                        cross["cn"] = jnp.zeros((batch,), jnp.int32)
+                    return {"attn": c, "cross": cross}
                 return {"attn": c}
             if kind == "R":
                 return {"rglru": {

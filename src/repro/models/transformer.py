@@ -137,15 +137,17 @@ def apply_layer(p, x, *, kind, cfg, run, mode="train", cache=None,
             ekv = _cross_kv(p["xattn"], enc_out, cfg, ftc, name)
         else:
             ekv = (ek["ck"], ek["cv"])
+        xcache = {"ck": ekv[0], "cv": ekv[1]}
+        if ek is not None and "cn" in ek:
+            # per-row encoder valid lengths (serving slots) ride along
+            xcache["cn"] = ek["cn"]
         m, _ = attention.apply(
             p["xattn"], h, cfg=cfg, run=run, kind="G", positions=positions,
             probe=probe, ftc=ftc, name=f"{name}/xattn",
-            cache={"ck": ekv[0], "cv": ekv[1]} if mode == "decode" else None,
+            cache=xcache if mode == "decode" else None,
             mode=mode, enc_kv=ekv)
-        if mode in ("prefill",):
-            new_cache["cross"] = {"ck": ekv[0], "cv": ekv[1]}
-        elif mode == "decode":
-            new_cache["cross"] = {"ck": ekv[0], "cv": ekv[1]}
+        if mode in ("prefill", "decode"):
+            new_cache["cross"] = xcache
         x = x + m
 
     if "ffn" in p:

@@ -2,39 +2,64 @@
 
 A fixed pool of ``max_batch`` decode *slots* serves a queue of requests:
 
-  * **admit** — a free slot prefils the next queued request (prompt padded
-    up to a configured length *bucket*, so prefill compiles once per bucket,
-    not once per prompt length) and its caches are written into the slot's
-    row of the batched cache pytree;
+  * **admit** — a free slot prefils the next queued request and its caches
+    are written into the slot's row of the batched cache pytree (and, in
+    paged mode, scattered into freshly allocated KV blocks);
   * **decode** — all slots step together through a fused ``lax.scan`` chunk
     of ``decode_chunk`` tokens (one host roundtrip per chunk, not per
     token), with *per-row* positions (every slot sits at its own depth);
   * **evict** — a request leaves its slot when it emits ``eos_id`` or hits
-    its ``max_new_tokens``; the slot is immediately re-admittable.
+    its ``max_new_tokens``; its blocks return to the free list and the slot
+    is immediately re-admittable.
+
+KV layouts (``cfg.kv``):
+
+  * ``"paged"`` (default) — attention KV lives in a per-layer *block pool*
+    ``(n_blocks, block_size, KH, Dh)`` addressed through a per-slot block
+    table.  Block 0 is the trash block: idle/evicted slots point at it, so
+    their decode writes land in memory nobody reads, and prefill scatters
+    use drop-mode sentinels so pad positions write nowhere at all.  A
+    request only occupies ``ceil((plen + max_new)/block_size)`` blocks
+    (plus ``ceil(window/block_size)`` for sliding-window layers), so short
+    requests don't reserve worst-case capacity — admission is bounded by
+    free *blocks*, not uniform slot capacity.
+  * ``"dense"`` — the PR 3 layout: every slot owns a capacity-sized cache
+    row.  Kept as the bit-exactness oracle for the paged path.
+
+Prompt handling (``cfg.buckets``):
+
+  * a tuple of lengths — prompts are right-padded up to a bucket, so
+    prefill compiles once per bucket.  Pad exactness: pad positions write
+    cache slots *ahead* of the request's position (dense) or are dropped
+    outright (paged); the per-row valid mask hides the rest — bit-identical
+    to an unpadded prefill.  Sliding-window layers need
+    ``max(buckets) <= cfg.window`` (pads would evict real history from the
+    rolling prefill cache), and recurrent blocks (R/S) / enc-dec are
+    rejected — their prefill state would integrate the pad tokens.
+  * ``None`` — exact-length prefill (compiles per distinct prompt length;
+    ``cfg.max_prompt`` bounds capacity).  No pad tokens exist, which lifts
+    the window limit and admits *every* model family: recurrent (R) and
+    SSM (S) state live in dense per-slot rows, and encoder-decoder models
+    keep per-slot cross-attention buffers with per-row valid lengths
+    (``cn``), so slots can hold encoder contexts of different lengths.
 
 Fault-tolerant serving keeps **per-request reliability accounting**: each
 request draws its faults from its own key stream ``fold_in(base, rid)``
 folded by its own token index, carried through the batch as an (B, 2) key
 array (``FTCtx`` per-row mode).  Row b's fault draws — and its quantization
 scales — depend only on request b, so evicting or admitting neighbours
-never perturbs another request's generation (reference backend;
-``policy.weight_faults`` must be False because weight SRAM is shared — the
-DLA models it as ECC-protected anyway).
-
-Exactness of bucket padding: prompts are right-padded; pad positions write
-cache slots *ahead* of the request's position, which decode overwrites
-token-by-token while the per-row valid mask hides the rest — bit-identical
-to an unpadded prefill.  Two structural limits follow: sliding-window
-layers need ``max(buckets) <= cfg.window`` (otherwise pads would evict real
-history from the rolling cache), and recurrent blocks (R/S) are rejected —
-their prefill state would integrate the pad tokens.  MoE models schedule
-fine, but expert-capacity competition couples rows (per-request streams
-stay independent; token *drops* may differ with batch composition).
+never perturbs another request's generation.  This holds with
+``policy.weight_faults`` too: the reference and fused backends draw
+*per-row* weight flip words, giving each request its own independent
+faulty-weight view of the shared SRAM.  ``ft_backend`` may be
+``"reference"`` or ``"fused"`` (the fused Pallas decode kernel — same
+draws, bit-identical tokens).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -57,12 +82,17 @@ class Request:
 @dataclasses.dataclass
 class SchedulerConfig:
     max_batch: int = 4               # concurrent decode slots
-    buckets: tuple = (8, 16)         # prompt lengths are padded up to these
+    buckets: tuple | None = (8, 16)  # prompt pad lengths; None = exact-length
+    max_prompt: int | None = None    # prompt cap when buckets is None
     max_new_tokens: int = 16         # per-request cap (cache headroom)
     decode_chunk: int = 4            # fused scan steps per host roundtrip
     temperature: float = 0.0
     eos_id: int = -1                 # < 0: no EOS eviction
     seed: int = 0
+    kv: str = "paged"                # "paged" | "dense" KV-cache layout
+    block_size: int = 8              # tokens per KV block (paged)
+    n_blocks: int | None = None      # pool size incl. trash block (paged;
+    #                                  default: full provisioning)
 
 
 @dataclasses.dataclass
@@ -70,11 +100,14 @@ class SchedStats:
     prefill_calls: int = 0
     insert_calls: int = 0
     chunk_calls: int = 0
+    retire_calls: int = 0
     tokens: int = 0
+    blocks_in_use_peak: int = 0
 
     @property
     def roundtrips(self) -> int:
-        return self.prefill_calls + self.insert_calls + self.chunk_calls
+        return (self.prefill_calls + self.insert_calls + self.chunk_calls
+                + self.retire_calls)
 
 
 class Scheduler:
@@ -88,39 +121,63 @@ class Scheduler:
         self.stats = SchedStats()
 
         mcfg = model.cfg
-        kinds = set(T._layer_kinds(mcfg))
-        if kinds & {"R", "S"} or mcfg.enc_dec:
-            raise ValueError(
-                "the bucketed scheduler supports attention families only: "
-                "right-padded prefill would integrate pad tokens into "
-                "recurrent/encoder state (use Engine for R/S and enc-dec)")
+        kinds = T._layer_kinds(mcfg)
+        exact = self.cfg.buckets is None
+        if self.cfg.kv not in ("paged", "dense"):
+            raise ValueError(f"unknown kv layout {self.cfg.kv!r}")
+        if set(kinds) & {"R", "S"} or mcfg.enc_dec:
+            if not (exact and self.cfg.kv == "paged"):
+                raise ValueError(
+                    "bucketed prefill supports attention families only: "
+                    "right-padded prompts would integrate pad tokens into "
+                    "recurrent/encoder state.  Recurrent (R/S) and enc-dec "
+                    "models schedule with buckets=None (exact-length "
+                    "prefill) and kv='paged'")
         self._front = (mcfg.n_frontend_tokens if mcfg.frontend == "vision"
                        else 0)
-        if "L" in kinds and self._front + max(self.cfg.buckets) > mcfg.window:
+        if (not exact and "L" in kinds
+                and self._front + max(self.cfg.buckets) > mcfg.window):
             raise ValueError(
                 f"buckets {self.cfg.buckets} (+ {self._front} frontend "
                 f"tokens) exceed the sliding window {mcfg.window}: pad "
-                "tokens would evict real history from the rolling cache")
-        if self.policy is not None:
-            if self.policy.weight_faults:
-                raise ValueError(
-                    "per-request fault streams need policy.weight_faults="
-                    "False (weights are shared across slots); use "
-                    "policy.tune(weight_faults=False)")
-            if ft_backend != "reference":
-                raise ValueError("per-request fault streams are reference-"
-                                 "backend only")
+                "tokens would evict real history from the rolling cache "
+                "(use buckets=None for exact-length prefill)")
+        if exact and self.cfg.max_prompt is None:
+            raise ValueError("buckets=None (exact-length prefill) needs "
+                             "cfg.max_prompt to bound slot capacity")
+        if self.policy is not None and ft_backend not in ("reference",
+                                                          "fused"):
+            raise ValueError(
+                "per-request fault streams need ft_backend='reference' or "
+                "'fused' (per-row keys, per-row weight-fault streams); the "
+                "pallas backend takes a single global key and a static t")
 
         # cache capacity: every slot can hold the largest admitted prompt
         # plus a full generation
-        self.capacity = (max(self.cfg.buckets) + self.cfg.max_new_tokens
-                         + self._front)
+        max_prompt = (self.cfg.max_prompt if exact
+                      else max(self.cfg.buckets))
+        self.capacity = max_prompt + self.cfg.max_new_tokens + self._front
+        self._window = mcfg.window if "L" in kinds else 0
+        bs = self.cfg.block_size
+        self._wg = -(-self.capacity // bs)
+        self._wl = -(-self._window // bs) if self._window else 0
+        if self.cfg.kv == "paged":
+            self.n_blocks = (self.cfg.n_blocks
+                             if self.cfg.n_blocks is not None
+                             else 1 + self.cfg.max_batch
+                             * (self._wg + self._wl))
+            if self.n_blocks < 2:
+                raise ValueError("paged KV needs n_blocks >= 2 (block 0 is "
+                                 "the trash block)")
+        else:
+            self.n_blocks = 0
 
         base = jax.random.PRNGKey(self.cfg.seed)
         ftbase, sbase = jax.random.split(base)
         self._ftbase, self._sbase = ftbase, sbase
         temperature = self.cfg.temperature
         capacity = self.capacity
+        window = self._window
 
         def _ftc(keys):
             if self.policy is None:
@@ -148,12 +205,96 @@ class Scheduler:
             tok0 = _sample(logits, skey[None], jnp.full((1,), -1, jnp.int32))
             return caches, tok0[0]
 
-        def _insert(caches, c1, slot):
-            def one(path, c, n):
-                names = [getattr(k, "key", "") for k in path]
-                axis = 1 if str(names[0]).startswith("seg") else 0
-                return jax.lax.dynamic_update_slice_in_dim(c, n, slot, axis)
-            return jax.tree_util.tree_map_with_path(one, caches, c1)
+        def _scatter_pool(pool, rows, bt_row, wdw, plen):
+            # pool (P, bs, KH, Dh); rows (1, S1, KH, Dh).  Prefill positions
+            # land at their logical slot's physical row; positions past the
+            # request's real length (bucket pads, capacity growth) get a
+            # sentinel index and are dropped — they write nowhere.
+            P = pool.shape[0]
+            S1 = rows.shape[1]
+            idx = jnp.arange(S1)
+            valid_n = jnp.minimum(plen, wdw) if wdw else plen
+            fi = bt_row[idx // bs] * bs + idx % bs
+            fi = jnp.where(idx < valid_n, fi, P * bs)
+            pf = pool.reshape(P * bs, *pool.shape[2:])
+            return pf.at[fi].set(rows[0], mode="drop").reshape(pool.shape)
+
+        def _insert(caches, c1, slot, plen, bt_g, bt_l):
+            # one executable for both layouts: paged attention leaves are
+            # scattered through the slot's new block table; dense leaves
+            # (dense KV, R/S state, cross-attn buffers) are slot-row writes
+            def upd(buf, new, stacked):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    buf, new, slot, 1 if stacked else 0)
+
+            def layer(pc, dc, kind, stacked):
+                wdw = window if kind == "L" else 0
+                out = {}
+                for nm, sub in pc.items():
+                    dsub = dc.get(nm)
+                    if (nm == "attn" and isinstance(sub, dict)
+                            and "bt" in sub):
+                        row = bt_l if wdw else bt_g
+                        scat = partial(_scatter_pool, bt_row=row, wdw=wdw,
+                                       plen=plen)
+                        if stacked:
+                            out[nm] = {
+                                "k": jax.vmap(scat)(sub["k"], dsub["k"]),
+                                "v": jax.vmap(scat)(sub["v"], dsub["v"]),
+                                "bt": sub["bt"].at[:, slot].set(row),
+                            }
+                        else:
+                            out[nm] = {
+                                "k": scat(sub["k"], dsub["k"]),
+                                "v": scat(sub["v"], dsub["v"]),
+                                "bt": sub["bt"].at[slot].set(row),
+                            }
+                    elif nm == "cross":
+                        s1e = dsub["ck"].shape[-3]
+                        if stacked:
+                            start = (0, slot, 0, 0, 0)
+                            cn = sub["cn"].at[:, slot].set(s1e)
+                        else:
+                            start = (slot,) + (0,) * (sub["ck"].ndim - 1)
+                            cn = sub["cn"].at[slot].set(s1e)
+                        out[nm] = {
+                            "ck": jax.lax.dynamic_update_slice(
+                                sub["ck"], dsub["ck"], start),
+                            "cv": jax.lax.dynamic_update_slice(
+                                sub["cv"], dsub["cv"], start),
+                            "cn": cn,
+                        }
+                    else:
+                        out[nm] = jax.tree.map(
+                            lambda b, n: upd(b, n, stacked), sub, dsub)
+                return out
+
+            mcfg_ = model.cfg
+            kinds_ = T._layer_kinds(mcfg_)
+            if mcfg_.unroll:
+                return {f"l{i}": layer(caches[f"l{i}"], c1[f"l{i}"],
+                                       kinds_[i], False)
+                        for i in range(len(kinds_))}
+            out = {}
+            for si, (pattern, _) in enumerate(mcfg_.segments):
+                out[f"seg{si}"] = {
+                    f"s{j}": layer(caches[f"seg{si}"][f"s{j}"],
+                                   c1[f"seg{si}"][f"s{j}"], kind, True)
+                    for j, kind in enumerate(pattern)}
+            return out
+
+        def _retire(caches, slot):
+            # point the evicted slot's block tables back at the trash block
+            # so its (still-stepping) row stops writing into blocks that may
+            # be reallocated to a new request
+            def one(path, leaf):
+                names = [str(getattr(k, "key", "")) for k in path]
+                if names and names[-1] == "bt":
+                    if names[0].startswith("seg"):
+                        return leaf.at[:, slot].set(0)
+                    return leaf.at[slot].set(0)
+                return leaf
+            return jax.tree_util.tree_map_with_path(one, caches)
 
         def _chunk(params, caches, tok, pos, tstep, rids, active, n_steps):
             act = active.astype(jnp.int32)
@@ -180,11 +321,17 @@ class Scheduler:
 
         self._prefill_one = jax.jit(_prefill_one)
         self._insert = jax.jit(_insert, donate_argnums=(0,))
+        self._retire_fn = jax.jit(_retire, donate_argnums=(0,))
         self._chunk = jax.jit(_chunk, static_argnums=(7,),
                               donate_argnums=(1,))
 
     # ------------------------------------------------------------ helpers --
     def _bucket(self, n: int) -> int:
+        if self.cfg.buckets is None:
+            if n > self.cfg.max_prompt:
+                raise ValueError(f"prompt length {n} exceeds cfg.max_prompt "
+                                 f"{self.cfg.max_prompt}")
+            return n
         for b in sorted(self.cfg.buckets):
             if n <= b:
                 return b
@@ -202,16 +349,36 @@ class Scheduler:
         last_idx = jnp.asarray([self._front + L - 1], jnp.int32)
         return batch1, last_idx, self._front + L
 
+    def _blocks_needed(self, plen: int, max_new: int) -> int:
+        if self.cfg.kv != "paged":
+            return 0
+        bs = self.cfg.block_size
+        total = min(plen + max_new, self.capacity)
+        need = -(-total // bs)
+        if self._window:
+            need += -(-min(total, self._window) // bs)
+        return need
+
+    def _init_caches(self, B: int):
+        if self.cfg.kv == "paged":
+            enc_len = (self.capacity - self.cfg.max_new_tokens
+                       if self.model.cfg.enc_dec else None)
+            return self.model.init_cache(
+                B, self.capacity, paged=(self.cfg.block_size, self.n_blocks),
+                enc_len=enc_len)
+        return self.model.init_cache(B, self.capacity)
+
     # ---------------------------------------------------------------- run --
     def run(self, requests) -> dict:
         """Serve `requests` to completion; returns {rid: Request} with
         ``generated`` / ``finish_reason`` filled."""
         cfg = self.cfg
         B = cfg.max_batch
+        bs = cfg.block_size
         self.stats = SchedStats()
         seen_rids = set()
         for req in requests:
-            self._bucket(len(req.tokens))   # fail fast, before any compute
+            plen = self._front + self._bucket(len(req.tokens))  # fail fast
             if req.rid in seen_rids:
                 raise ValueError(
                     f"duplicate request id {req.rid}: results are keyed by "
@@ -223,30 +390,75 @@ class Scheduler:
                     f"but the slot capacity budgets cfg.max_new_tokens="
                     f"{cfg.max_new_tokens}: decoding past capacity would "
                     "overwrite cache history")
+            if self.model.cfg.enc_dec and req.extras:
+                fl = np.asarray(req.extras["frames"]).shape[0]
+                if fl > self.capacity - cfg.max_new_tokens:
+                    raise ValueError(
+                        f"request {req.rid} encoder input length {fl} "
+                        f"exceeds the cross-attention capacity "
+                        f"{self.capacity - cfg.max_new_tokens} "
+                        "(cfg.max_prompt)")
+            if (cfg.kv == "paged"
+                    and self._blocks_needed(plen, req.max_new_tokens)
+                    > self.n_blocks - 1):
+                raise ValueError(
+                    f"request {req.rid} needs "
+                    f"{self._blocks_needed(plen, req.max_new_tokens)} KV "
+                    f"blocks but the pool has {self.n_blocks - 1} "
+                    "allocatable: raise cfg.n_blocks or block_size")
             req.generated = []              # a re-submitted Request restarts
             req.finish_reason = None
         queue = collections.deque(requests)
         slots: list[Request | None] = [None] * B
         out = {}
 
-        caches = self.model.init_cache(B, self.capacity)
+        caches = self._init_caches(B)
         tok = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
         tstep = np.zeros((B,), np.int32)
         rids = np.zeros((B,), np.int32)
+        free_blocks = collections.deque(range(1, self.n_blocks))
+        slot_blocks: list[list] = [[] for _ in range(B)]
+
+        def alloc_tables(plen, max_new):
+            """Pop blocks for a request; return (bt_g, bt_l) table rows."""
+            total = min(plen + max_new, self.capacity)
+            g_need = -(-total // bs)
+            l_need = (-(-min(total, self._window) // bs)
+                      if self._window else 0)
+            got = [free_blocks.popleft() for _ in range(g_need + l_need)]
+            bt_g = np.zeros((self._wg,), np.int32)
+            bt_g[:g_need] = got[:g_need]
+            bt_l = np.zeros((max(self._wl, 1),), np.int32)
+            if l_need:
+                bt_l[:l_need] = got[g_need:]
+            return got, jnp.asarray(bt_g), jnp.asarray(bt_l)
+
+        def release(s):
+            if cfg.kv == "paged":
+                free_blocks.extend(slot_blocks[s])
+                slot_blocks[s] = []
 
         def finish(s, req, reason):
             req.finish_reason = reason
             out[req.rid] = req
             slots[s] = None
+            release(s)
 
         while queue or any(s is not None for s in slots):
             # ---- admit into free slots (a request that finishes at
             # prefill — EOS first token or max_new_tokens == 1 — does not
             # use up the slot's turn; the slot retries the queue) ---------
+            admitted = 0
             for s in range(B):
                 while slots[s] is None and queue:
-                    req = queue.popleft()
+                    req = queue[0]
+                    need = self._blocks_needed(
+                        self._front + self._bucket(len(req.tokens)),
+                        req.max_new_tokens)
+                    if need > len(free_blocks):
+                        break               # wait for evictions to free blocks
+                    queue.popleft()
                     batch1, last_idx, plen = self._make_batch1(req)
                     c1, tok0 = self._prefill_one(
                         self.params, batch1, last_idx,
@@ -263,14 +475,32 @@ class Scheduler:
                         req.finish_reason = "length"
                         out[req.rid] = req
                         continue
+                    if cfg.kv == "paged":
+                        got, bt_g, bt_l = alloc_tables(plen,
+                                                       req.max_new_tokens)
+                        slot_blocks[s] = got
+                        in_use = self.n_blocks - 1 - len(free_blocks)
+                        self.stats.blocks_in_use_peak = max(
+                            self.stats.blocks_in_use_peak, in_use)
+                    else:
+                        bt_g = jnp.zeros((self._wg,), jnp.int32)
+                        bt_l = jnp.zeros((max(self._wl, 1),), jnp.int32)
                     caches = self._insert(caches, c1,
-                                          jnp.asarray(s, jnp.int32))
+                                          jnp.asarray(s, jnp.int32),
+                                          jnp.asarray(plen, jnp.int32),
+                                          bt_g, bt_l)
                     self.stats.insert_calls += 1
                     slots[s] = req
+                    admitted += 1
                     tok[s], pos[s], tstep[s], rids[s] = t0, plen, 0, req.rid
 
             active = np.array([r is not None for r in slots])
             if not active.any():
+                if queue and not admitted:
+                    raise RuntimeError(
+                        "scheduler stalled: no active slots and the next "
+                        "request cannot be admitted (KV block pool too "
+                        "small?)")
                 continue
 
             # ---- one fused decode chunk --------------------------------
@@ -286,6 +516,7 @@ class Scheduler:
             toks = np.asarray(toksj)                      # (B, chunk)
 
             # ---- harvest + evict ---------------------------------------
+            evicted = []
             for s in range(B):
                 req = slots[s]
                 if req is None:
@@ -295,8 +526,15 @@ class Scheduler:
                     self.stats.tokens += 1
                     if cfg.eos_id >= 0 and int(t) == cfg.eos_id:
                         finish(s, req, "eos")
+                        evicted.append(s)
                         break
                     if len(req.generated) >= req.max_new_tokens:
                         finish(s, req, "length")
+                        evicted.append(s)
                         break
+            if cfg.kv == "paged":
+                for s in evicted:
+                    caches = self._retire_fn(caches,
+                                             jnp.asarray(s, jnp.int32))
+                    self.stats.retire_calls += 1
         return out

@@ -1,0 +1,141 @@
+"""Fused inject->protect->qmatmul decode kernel: bit-exactness against the
+composed reference ops (docs/kernels.md documents the contract).
+
+Compile-cost discipline: every distinct *static* kernel structure (policy
+metadata, per-row flag, weight-fault routing) costs a fresh interpret-mode
+compile, so the sweep varies BER / q_scale / shapes on the *trace* (free)
+and bounds the number of distinct structures.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ft
+from repro.core import faults
+from repro.core import quantization as Q
+from repro.kernels.fused_decode.kernel import fused_decode
+from repro.kernels.fused_decode.ref import fused_ref
+
+POLICIES = ("base", "crt1", "crt2", "crt3", "arch", "alg", "cl")
+
+
+def _xw(m, k, n, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(kx, (m, k), jnp.float32),
+            jax.random.normal(kw, (k, n), jnp.float32))
+
+
+def _assert_bitwise(a, b, msg):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype and a.shape == b.shape, msg
+    if not (a == b).all():
+        i = np.unravel_index(np.argmax(a != b), a.shape)
+        raise AssertionError(f"{msg}: first mismatch at {i}: "
+                             f"{a[i]!r} != {b[i]!r}")
+
+
+def test_kernel_matches_ref_triplet():
+    """The pallas kernel and kernels/fused_decode/ref.py agree bitwise on
+    raw integer operands — including multi-block K accumulation, packed
+    per-row weight flip words, and the DPPU clean-recompute select."""
+    key = jax.random.PRNGKey(3)
+    m, k, n = 8, 256, 128          # grid of 2 K-blocks
+    ks = jax.random.split(key, 8)
+    xq = jax.random.randint(ks[0], (m, k), -128, 128, jnp.int32
+                            ).astype(jnp.int8)
+    wq = jax.random.randint(ks[1], (k, n), -128, 128, jnp.int32
+                            ).astype(jnp.int8)
+    oflips = faults.flip_word(ks[2], (m, n), 1e-2, Q.OUT_BITS)
+    qs = jnp.zeros((1, 1), jnp.int32)
+
+    # plain: no weight faults, no DPPU
+    y, t = fused_decode(xq, wq, oflips, qs, per_row=False, dppu_src="none",
+                        perrow_wf=False)
+    yr, tr = fused_ref(xq, wq, oflips, q_scale=0, per_row=False)
+    _assert_bitwise(y, yr.astype(jnp.int8), "plain yq")
+    _assert_bitwise(t[0, 0], jnp.asarray(tr, jnp.int32), "plain t")
+
+    # per-row + per-row weight flips + DPPU recompute from the clean w
+    wflips = jax.vmap(lambda kk: faults.flip_word(
+        kk, (k, n), 5e-3, Q.OUT_BITS))(jax.random.split(ks[3], m))
+    dflips = faults.flip_word(ks[4], (m, n), 5e-3, Q.OUT_BITS)
+    imp = (jax.random.uniform(ks[5], (n,)) < 0.5)
+    y2, t2 = fused_decode(xq, wq, oflips, qs, wflips=wflips, dflips=dflips,
+                          imp=imp.astype(jnp.int32).reshape(1, n),
+                          per_row=True, dppu_src="w", perrow_wf=True)
+    y2r, t2r = fused_ref(xq, wq, oflips, q_scale=0, per_row=True,
+                         wflips=wflips, dflips=dflips, imp=imp)
+    _assert_bitwise(y2, y2r.astype(jnp.int8), "per-row yq")
+    _assert_bitwise(t2[:, 0], jnp.ravel(t2r).astype(jnp.int32), "per-row t")
+
+
+@pytest.mark.parametrize("policy_name", POLICIES)
+def test_fused_matches_reference_policy_sweep(policy_name):
+    """For every registry policy, backend='fused' equals the reference
+    backend BITWISE.  BER, dyn q_scale, and shapes vary on the trace inside
+    one compiled structure per (policy, shape) pair; shapes include odd /
+    non-8/128-divisible sizes exercising the tile-padding path."""
+    imp_key = jax.random.PRNGKey(9)
+    for shape_i, (m, k, n) in enumerate(((5, 70, 57), (9, 200, 130))):
+        x, w = _xw(m, k, n, seed=shape_i)
+        important = jax.random.uniform(
+            jax.random.fold_in(imp_key, shape_i), (n,)) < 0.3
+        for ber in (1e-3, 1e-2):
+            for qs in (0, 3):
+                policy = ft.get_policy(policy_name, ber=ber,
+                                       weight_faults=True)
+                key = jax.random.fold_in(jax.random.PRNGKey(11),
+                                         shape_i * 100 + qs)
+                args = (key, x, w, policy, important)
+                dyn = {"q_scale": jnp.asarray(qs, jnp.int32)}
+                y_ref = ft.protect_linear(*args, backend="reference",
+                                          dyn=dyn)
+                y_fus = ft.protect_linear(*args, backend="fused", dyn=dyn)
+                _assert_bitwise(
+                    y_ref, y_fus,
+                    f"{policy_name} ber={ber} qs={qs} shape={(m, k, n)}")
+
+
+def test_fused_matches_reference_per_row():
+    """Per-row key batches (the serving path): each row's fault stream —
+    including its private faulty-weight view — matches the reference."""
+    m, k, n = 6, 70, 57
+    x, w = _xw(m, k, n, seed=7)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(100, 100 + m))
+    important = jax.random.uniform(jax.random.PRNGKey(1), (n,)) < 0.3
+    for pname in ("crt2", "cl"):           # plain ECC + DPPU-recompute
+        policy = ft.get_policy(pname, ber=5e-3, weight_faults=True)
+        y_ref = ft.protect_linear(keys, x, w, policy, important,
+                                  backend="reference")
+        y_fus = ft.protect_linear(keys, x, w, policy, important,
+                                  backend="fused")
+        _assert_bitwise(y_ref, y_fus, f"per-row {pname}")
+    # row independence: swapping a neighbour's key leaves other rows alone
+    policy = ft.get_policy("crt2", ber=5e-3, weight_faults=True)
+    keys2 = keys.at[0].set(jax.random.PRNGKey(999))
+    y_a = ft.protect_linear(keys, x, w, policy, backend="fused")
+    y_b = ft.protect_linear(keys2, x, w, policy, backend="fused")
+    _assert_bitwise(y_a[1:], y_b[1:], "rows 1.. perturbed by row 0 key")
+    assert not np.array_equal(np.asarray(y_a[0]), np.asarray(y_b[0]))
+
+
+def test_engine_token_parity_reference_vs_fused():
+    """End to end: serve.Engine at temperature 0 emits identical tokens with
+    ft_backend='reference' and ft_backend='fused' (weight faults on)."""
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = get_config("h2o-danube-1.8b", reduced=True)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 6),
+                                          0, cfg.vocab)}
+    policy = ft.get_policy("cl", ber=3e-3, weight_faults=True)
+    toks = {}
+    for backend in ("reference", "fused"):
+        eng = Engine(m, params, cfg=ServeConfig(max_new_tokens=6),
+                     policy=policy, ft_backend=backend)
+        toks[backend] = np.asarray(eng.generate(batch, seed=0))
+    _assert_bitwise(toks["reference"], toks["fused"], "engine tokens")

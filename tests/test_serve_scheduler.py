@@ -111,17 +111,24 @@ def test_per_request_fault_stream_independence(danube):
 
 def test_scheduler_guards(danube):
     cfg, m, params = danube
-    # shared weight SRAM: per-request streams need weight_faults=False
-    with pytest.raises(ValueError, match="weight_faults"):
-        Scheduler(m, params, policy=ft.get_policy("crt1", ber=1e-3))
     # sliding-window models: buckets must fit inside the window
     with pytest.raises(ValueError, match="window"):
         Scheduler(m, params, SchedulerConfig(buckets=(8, 64)))
-    # recurrent state would integrate pad tokens
+    # recurrent state would integrate pad tokens under *bucketed* prefill
     ssm_cfg = get_config("mamba2-2.7b", reduced=True)
     ssm = build(ssm_cfg)
     with pytest.raises(ValueError, match="attention"):
         Scheduler(ssm, ssm.init(jax.random.PRNGKey(0)))
+    # exact-length prefill needs an explicit capacity bound
+    with pytest.raises(ValueError, match="max_prompt"):
+        Scheduler(m, params, SchedulerConfig(buckets=None))
+    with pytest.raises(ValueError, match="kv layout"):
+        Scheduler(m, params, SchedulerConfig(kv="sparse"))
+    # the pallas backend takes one global key + static t: no per-request
+    # streams (reference and fused both work — see the serving tests)
+    with pytest.raises(ValueError, match="pallas"):
+        Scheduler(m, params, policy=ft.get_policy("crt1", ber=1e-3),
+                  ft_backend="pallas")
     # fail-fast request validation: duplicate rids (results and fault
     # streams are keyed by rid) and per-request caps beyond slot capacity
     sched = Scheduler(m, params, SchedulerConfig(
@@ -134,6 +141,97 @@ def test_scheduler_guards(danube):
     with pytest.raises(ValueError, match="capacity"):
         sched.run([Request(rid=1, tokens=_prompt(4, cfg.vocab, 0),
                            max_new_tokens=9)])
+    # a single request can never need more KV blocks than the pool holds
+    tiny = Scheduler(m, params, SchedulerConfig(
+        max_batch=2, buckets=(8,), max_new_tokens=4, block_size=2,
+        n_blocks=3))
+    with pytest.raises(ValueError, match="blocks"):
+        tiny.run([Request(rid=1, tokens=_prompt(8, cfg.vocab, 0),
+                          max_new_tokens=4)])
+
+
+def test_paged_matches_dense(danube):
+    """The paged KV cache is a pure layout change: the same workload through
+    kv='paged' and kv='dense' yields bit-identical tokens, even with a
+    deliberately tight block pool that forces requests to wait for blocks."""
+    cfg, m, params = danube
+    mk = lambda: [Request(rid=i, tokens=_prompt(3 + 2 * (i % 3), cfg.vocab,
+                                                20 + i),
+                          max_new_tokens=5 + (i % 2)) for i in range(5)]
+    outs = {}
+    for kv in ("dense", "paged"):
+        scfg = SchedulerConfig(max_batch=2, buckets=(8,), max_new_tokens=6,
+                               decode_chunk=3, kv=kv)
+        outs[kv] = Scheduler(m, params, scfg).run(mk())
+    for i in range(5):
+        assert outs["paged"][i].generated == outs["dense"][i].generated
+    # tight pool: room for roughly one request's blocks at a time
+    probe = Scheduler(m, params, SchedulerConfig(
+        max_batch=2, buckets=(8,), max_new_tokens=6, kv="paged",
+        block_size=4))
+    need1 = probe._blocks_needed(8, 6)
+    tight = Scheduler(m, params, SchedulerConfig(
+        max_batch=2, buckets=(8,), max_new_tokens=6, decode_chunk=3,
+        kv="paged", block_size=4, n_blocks=1 + need1 + 1))
+    out_t = tight.run(mk())
+    for i in range(5):
+        assert out_t[i].generated == outs["dense"][i].generated
+    assert tight.stats.blocks_in_use_peak <= need1 + 1
+
+
+def test_weight_faults_serving(danube):
+    """PR 3's weight_faults=False restriction is lifted: per-row weight
+    flip streams give each request its own faulty view of the shared SRAM.
+    Tokens stay a pure function of rid (alone == crowded), and the fused
+    backend reproduces the reference stream bit-for-bit."""
+    cfg, m, params = danube
+    policy = ft.get_policy("crt1", ber=3e-3, weight_faults=True)
+    scfg = SchedulerConfig(max_batch=2, buckets=(8,), max_new_tokens=6,
+                           decode_chunk=3)
+    alone = Scheduler(m, params, scfg, policy=policy).run(
+        [Request(rid=7, tokens=_prompt(5, cfg.vocab, 7), max_new_tokens=6)])
+    crowd = [Request(rid=7, tokens=_prompt(5, cfg.vocab, 7),
+                     max_new_tokens=6),
+             Request(rid=8, tokens=_prompt(3, cfg.vocab, 8),
+                     max_new_tokens=6)]
+    crowded = Scheduler(m, params, scfg, policy=policy).run(crowd)
+    assert alone[7].generated == crowded[7].generated
+    fused = Scheduler(m, params, scfg, policy=policy,
+                      ft_backend="fused").run(
+        [Request(rid=7, tokens=_prompt(5, cfg.vocab, 7), max_new_tokens=6)])
+    assert fused[7].generated == alone[7].generated
+
+
+def test_exact_mode_recurrent_and_enc_dec():
+    """buckets=None (exact-length prefill) + paged KV admits the families
+    bucketed prefill rejects: recurrent/SSM state and encoder-decoder
+    cross-attention, with per-slot encoder lengths."""
+    ssm_cfg = get_config("mamba2-2.7b", reduced=True)
+    sm = build(ssm_cfg)
+    sparams = sm.init(jax.random.PRNGKey(0))
+    scfg = SchedulerConfig(max_batch=2, buckets=None, max_prompt=8,
+                           max_new_tokens=5, decode_chunk=2)
+    mk = lambda: [Request(rid=i, tokens=_prompt(4 + 2 * (i % 2),
+                                                ssm_cfg.vocab, i),
+                          max_new_tokens=5) for i in range(3)]
+    crowded = Scheduler(sm, sparams, scfg).run(mk())
+    assert all(len(r.generated) == 5 for r in crowded.values())
+    alone = Scheduler(sm, sparams, scfg).run([mk()[0]])
+    assert alone[0].generated == crowded[0].generated
+
+    ed_cfg = get_config("seamless-m4t-medium", reduced=True)
+    em = build(ed_cfg)
+    eparams = em.init(jax.random.PRNGKey(0))
+    frames = lambda n, s: jax.random.normal(
+        jax.random.PRNGKey(90 + s), (n, ed_cfg.d_model), jnp.float32)
+    ereqs = lambda: [Request(rid=i, tokens=_prompt(4, ed_cfg.vocab, 40 + i),
+                             max_new_tokens=4,
+                             extras={"frames": frames(5 + i, i)})
+                     for i in range(3)]
+    ecrowd = Scheduler(em, eparams, scfg).run(ereqs())
+    assert all(len(r.generated) == 4 for r in ecrowd.values())
+    ealone = Scheduler(em, eparams, scfg).run([ereqs()[1]])
+    assert ealone[1].generated == ecrowd[1].generated
 
 
 def test_scheduler_vision_frontend():
