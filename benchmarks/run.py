@@ -23,6 +23,7 @@ def _benchmarks():
     from benchmarks.dse_batch import dse_batched_vs_sequential
     from benchmarks.fused_bench import fused_vs_composed
     from benchmarks.serve_bench import serve_scan_vs_python
+    from benchmarks.train_bench import fat_dse, fat_vs_baseline
 
     def roofline_single():
         rows = R.full_table("single")
@@ -47,6 +48,8 @@ def _benchmarks():
         "dse_batched_vs_sequential": dse_batched_vs_sequential,
         "fused_vs_composed": fused_vs_composed,
         "serve_scan_vs_python": serve_scan_vs_python,
+        "fat_vs_baseline": fat_vs_baseline,
+        "fat_dse": fat_dse,
         "roofline_single_pod": roofline_single,
         "roofline_multi_pod": roofline_multi,
     }
@@ -54,7 +57,7 @@ def _benchmarks():
 
 # DSE entries rerun fault injection many times; the batched-vs-sequential
 # comparison deliberately includes a slow sequential arm.
-FAST_SKIP = {"fig15_table2_dse", "dse_batched_vs_sequential"}
+FAST_SKIP = {"fig15_table2_dse", "dse_batched_vs_sequential", "fat_dse"}
 
 
 def main() -> None:

@@ -1,0 +1,83 @@
+"""Fault-aware training (FAT) benchmarks.
+
+fat_vs_baseline — the headline claim: a CNN trained *through* injected
+faults (``train_cnn(fat=...)``, straight-through gradients on the bit-exact
+faulty datapath) holds more accuracy under deployment-time faults than the
+same architecture trained clean, at matched clean accuracy.  Reports
+accuracy-under-fault across a BER sweep for both networks plus the margin
+at the training operating point.
+
+fat_dse — the cross-layer payoff: running the Bayesian DSE over Table I
+*plus* the ``fat_ber`` training axis (``fat_table1_space``) finds a feasible
+config with less protection hardware than the DSE restricted to
+``fat_ber=0``, because training-time hardening substitutes for area.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.workloads import vgg16_gemms
+from repro.core import bayesopt as B
+from repro.core.evaluate import FatCnnOracle, trained_cnn, trained_cnn_fat
+from repro.ft import get_policy
+
+TRAIN_STEPS = 250
+FAT_BER = 2e-3
+BER_SWEEP = (5e-4, 1e-3, 2e-3, 4e-3)
+
+
+def fat_vs_baseline():
+    base = trained_cnn("vgg", TRAIN_STEPS)
+    fat = trained_cnn_fat("vgg", TRAIN_STEPS, FAT_BER)
+    rows = [("clean", base.clean_acc, fat.clean_acc)]
+    margin = {}
+    for ber in BER_SWEEP:
+        pol = get_policy("cl", ber=ber)
+        a_base = base.accuracy(pol)
+        a_fat = fat.accuracy(pol)
+        rows.append((f"ber={ber:g}", a_base, a_fat))
+        margin[ber] = a_fat - a_base
+    derived = {"clean_base": round(base.clean_acc, 4),
+               "clean_fat": round(fat.clean_acc, 4),
+               "margin_at_fat_ber": round(margin.get(FAT_BER, 0.0), 4),
+               "margin_at_2x": round(margin.get(2 * FAT_BER, 0.0), 4)}
+    return [list(r) for r in rows], derived
+
+
+def _fat_space(fat_bers):
+    """Reduced Table-I grid (the dse_batch one) + the training axis."""
+    return [
+        B.Param("s_th", (0.05, 0.1, 0.15, 0.2), monotone=+1),
+        B.Param("ib_th", (2, 3, 4), monotone=+1),
+        B.Param("nb_th", (1, 2, 3), monotone=+1),
+        B.Param("q_scale", (4, 7, 10), monotone=0),
+        B.Param("s_policy", ("uniform", "global"), monotone=0),
+        B.Param("dot_size", (16, 52, 128), monotone=0),
+        B.Param("data_reuse", (True, False), monotone=0),
+        B.Param("pe_policy", ("configurable", "direct"), monotone=0),
+        B.Param("fat_ber", tuple(fat_bers), monotone=0),
+    ]
+
+
+def fat_dse():
+    from repro.core.pipeline import optimize
+
+    oracle = FatCnnOracle("vgg", TRAIN_STEPS)
+    clean = oracle.oracle(0.0).accuracy(None)
+    cons = B.Constraints(acc_min=0.94 * clean, perf_max=0.10, bw_max=0.10)
+    layers = vgg16_gemms()
+    rows = []
+    best = {}
+    for mode, fat_bers in (("clean_trained", (0.0,)),
+                           ("fat_axis", (0.0, FAT_BER))):
+        jax.clear_caches()
+        res = optimize(oracle, layers, cons, ber=FAT_BER,
+                       iter_max_step=16, seed=17, batch_size=8,
+                       space=_fat_space(fat_bers),
+                       acc_oracle_batch=oracle.batch)
+        area = res.area_overhead
+        best[mode] = area
+        rows.append([mode, res.dse.best, area])
+    derived = {"area_clean_trained": best["clean_trained"],
+               "area_fat_axis": best["fat_axis"]}
+    return rows, derived

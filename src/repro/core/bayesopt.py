@@ -48,6 +48,16 @@ def table1_space() -> list[Param]:
     ]
 
 
+def fat_table1_space(fat_bers: tuple = (0.0, 1e-3, 2e-3)) -> list[Param]:
+    """Table I extended with the training-time axis: ``fat_ber`` selects how
+    much fault pressure the network was *trained* through (fault-aware
+    training).  A FAT-hardened network tolerates more deployment faults, so
+    the DSE can trade protection hardware against training exposure.  Not
+    marked monotone: higher fat_ber helps accuracy-under-fault but is not a
+    protection-strength knob (it costs nothing in area)."""
+    return table1_space() + [Param("fat_ber", tuple(fat_bers), monotone=0)]
+
+
 @dataclasses.dataclass
 class EvalResult:
     area: float          # redundant-area overhead (objective, minimized)

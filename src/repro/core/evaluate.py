@@ -281,3 +281,56 @@ def trained_cnn(arch: str = "vgg", steps: int = 250) -> CnnOracle:
     o = CnnOracle(params, cfg)
     o.clean_acc = acc
     return o
+
+
+@lru_cache(maxsize=8)
+def trained_cnn_fat(arch: str = "vgg", steps: int = 250,
+                    fat_ber: float = 0.0,
+                    fat_policy: str = "cl") -> CnnOracle:
+    """Fault-aware-trained benchmark CNN (``fat_ber=0`` is ``trained_cnn``).
+
+    Same init key, data stream, and step budget as :func:`trained_cnn`, so
+    a (baseline, FAT) pair differs only in the fault pressure seen during
+    training — the controlled comparison behind the ``fat_ber`` DSE axis."""
+    if fat_ber == 0.0:
+        return trained_cnn(arch, steps)
+    from repro.models.cnn import train_cnn
+    cfg = CNNConfig(arch=arch)
+    params, acc = train_cnn(jax.random.PRNGKey(0), cfg, steps=steps,
+                            fat=fat_policy, fat_ber=fat_ber)
+    o = CnnOracle(params, cfg)
+    o.clean_acc = acc
+    return o
+
+
+class FatCnnOracle:
+    """Accuracy oracle over (policy, fat_ber): the DSE's cross-layer +
+    *training-time* search surface.
+
+    ``fat_ber`` selects which fault-aware-trained network evaluates the
+    candidate (networks are lru-cached per fat value), so the optimizer can
+    trade deployment-time protection hardware against training-time fault
+    exposure.  The batch path groups candidates by fat value and reuses each
+    network's vmapped executable."""
+
+    def __init__(self, arch: str = "vgg", steps: int = 250,
+                 fat_policy: str = "cl"):
+        self.arch, self.steps, self.fat_policy = arch, steps, fat_policy
+
+    def oracle(self, fat_ber: float = 0.0) -> CnnOracle:
+        return trained_cnn_fat(self.arch, self.steps, float(fat_ber),
+                               self.fat_policy)
+
+    def __call__(self, ft, fat_ber: float = 0.0, **kw) -> float:
+        return self.oracle(fat_ber).accuracy(ft, **kw)
+
+    def batch(self, fts, fat_bers, **kw) -> list[float]:
+        out: list[float | None] = [None] * len(fts)
+        groups: dict[float, list[int]] = {}
+        for i, fb in enumerate(fat_bers):
+            groups.setdefault(float(fb), []).append(i)
+        for fb, idxs in groups.items():
+            accs = self.oracle(fb).accuracy_batch([fts[i] for i in idxs], **kw)
+            for j, i in enumerate(idxs):
+                out[i] = accs[j]
+        return out  # type: ignore[return-value]

@@ -19,6 +19,23 @@ def residual_ber(ber: float) -> float:
     return 3.0 * ber * ber * (1.0 - ber) + ber ** 3
 
 
+def fold_stream(key: jax.Array, *indices) -> jax.Array:
+    """Derive a subordinate key by folding each index in order.
+
+    This is the repo's key-stream contract written as a function: every
+    consumer of fault randomness addresses its draws by a *path* of integer
+    coordinates under one root key — ``fold_stream(root, step, microbatch)``
+    for training, ``fold_stream(root, call_index)`` for serving — so two
+    different coordinates can never replay each other's draws, and a
+    checkpoint that restores the coordinate (e.g. the optimizer step
+    counter) resumes the exact stream an uninterrupted run would have used.
+    Indices may be traced (the train step folds its step counter in-jit).
+    """
+    for i in indices:
+        key = jax.random.fold_in(key, i)
+    return key
+
+
 def _flip_plane(key, shape, p):
     return jax.random.bernoulli(key, p, shape)
 

@@ -41,8 +41,17 @@ class CrossLayerResult:
         return self.policy
 
 
+# DSE axes that configure *training*, not the deployed protection policy.
+# They are stripped before policy construction (a policy pytree must not
+# carry training metadata) and routed to the accuracy oracle instead, which
+# uses them to pick the fault-aware-trained network that evaluates the
+# candidate (see repro.core.evaluate.FatCnnOracle).
+TRAIN_AXES = ("fat_ber",)
+
+
 def _policy_from_cfg(cfg: dict, ber: float) -> ProtectionPolicy:
     """One DSE point (a Table-I assignment dict) as a cross-layer policy."""
+    cfg = {k: v for k, v in cfg.items() if k not in TRAIN_AXES}
     return get_policy("cl", ber=ber, **cfg)
 
 
@@ -171,7 +180,10 @@ def optimize(acc_oracle: Callable[[ProtectionPolicy], float],
     def evaluate(cfg: dict) -> B.EvalResult:
         policy = _policy_from_cfg(cfg, ber)
         alg, arch, circ = policy.algorithm, policy.arch, policy.circuit
-        acc = acc_oracle(policy)
+        if "fat_ber" in cfg:
+            acc = acc_oracle(policy, fat_ber=cfg["fat_ber"])
+        else:
+            acc = acc_oracle(policy)
         area = A.array_area(array_dim, circ.nb_th, alg.q_scale, circ.pe_policy,
                             dot_size=arch.dot_size,
                             ib_th=circ.ib_th)["overhead"]
@@ -184,8 +196,13 @@ def optimize(acc_oracle: Callable[[ProtectionPolicy], float],
 
     def evaluate_batch(cfgs: list[dict]) -> list[B.EvalResult]:
         pols = [_policy_from_cfg(c, ber) for c in cfgs]
+        fat = [c.get("fat_ber", 0.0) for c in cfgs] if any(
+            "fat_ber" in c for c in cfgs) else None
         if acc_oracle_batch is not None:
-            accs = list(acc_oracle_batch(pols))
+            accs = list(acc_oracle_batch(pols) if fat is None
+                        else acc_oracle_batch(pols, fat_bers=fat))
+        elif fat is not None:
+            accs = [acc_oracle(p, fat_ber=fb) for p, fb in zip(pols, fat)]
         else:
             accs = [acc_oracle(p) for p in pols]
         return evaluate_policies(pols, accs, layers, array_dim)

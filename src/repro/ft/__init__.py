@@ -24,4 +24,5 @@ from repro.ft.registry import (get_policy, list_policies,  # noqa: F401
 # isort: split
 from repro.ft.compat import as_policy, from_ftconfig  # noqa: F401
 # isort: split
-from repro.ft.api import BACKENDS, calibrate_t, protect_linear  # noqa: F401
+from repro.ft.api import (BACKENDS, calibrate_t, protect_linear,  # noqa: F401
+                          protect_linear_ste)

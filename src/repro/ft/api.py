@@ -111,6 +111,50 @@ def protect_linear(key: jax.Array, x: jax.Array, w: jax.Array,
                      f"{BACKENDS}")
 
 
+# ------------------------------------------------------ straight-through ----
+@jax.custom_vjp
+def _ste_tie(x, w, y_prot):
+    """Forward: the protected output, untouched.  Backward: cotangents of the
+    clean float matmul ``x @ w`` — the straight-through estimator."""
+    return y_prot
+
+
+def _ste_fwd(x, w, y_prot):
+    return y_prot, (x, w)
+
+
+def _ste_bwd(res, g):
+    x, w = res
+    g2 = g.astype(jnp.float32).reshape(-1, w.shape[1])
+    x2 = x.astype(jnp.float32).reshape(-1, w.shape[0])
+    gx = (g2 @ w.astype(jnp.float32).T).reshape(x.shape).astype(x.dtype)
+    gw = (x2.T @ g2).astype(w.dtype)
+    return gx, gw, jnp.zeros_like(g)
+
+
+_ste_tie.defvjp(_ste_fwd, _ste_bwd)
+
+
+def protect_linear_ste(key: jax.Array, x: jax.Array, w: jax.Array,
+                       policy: ProtectionPolicy,
+                       important: jax.Array | None = None, **kw) -> jax.Array:
+    """:func:`protect_linear` with a straight-through gradient rule — the
+    fault-aware-training (FAT) entry point.
+
+    The forward value is the :func:`protect_linear` output *unchanged* (the
+    integer inject/protect/quantize datapath stays bit-exact — the training
+    loss sees exactly the faulty DLA the deployment will run), while the
+    backward pass returns the cotangents of the clean float ``x @ w``: the
+    non-differentiable quantize/flip/truncate chain is treated as identity,
+    so gradients flow and the network learns to place its decision margins
+    where bit flips cannot reach them.  ``kw`` is forwarded verbatim
+    (``layer_protected`` / ``backend`` / ``t`` / ``interpret`` / ``dyn``).
+    """
+    y = protect_linear(key, jax.lax.stop_gradient(x),
+                       jax.lax.stop_gradient(w), policy, important, **kw)
+    return _ste_tie(x, w, y)
+
+
 # ------------------------------------------------------------ reference ----
 @partial(jax.jit, static_argnames=("layer_protected",))
 def _protect_reference(key, x, w, policy: ProtectionPolicy, important,

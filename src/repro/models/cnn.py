@@ -116,33 +116,60 @@ def accuracy(logits, labels):
 
 
 def train_cnn(key, cfg: CNNConfig, steps: int = 300, batch: int = 64,
-              lr: float = 3e-3, data_seed: int = 99, noise: float = 1.6):
+              lr: float = 3e-3, data_seed: int = 99, noise: float = 1.6,
+              fat=None, fat_ber: float = 0.0, fat_ramp: int | None = None):
     """Quick SGD+momentum training on the procedural vision set; returns
-    (params, final train accuracy).
+    (params, final *clean* train accuracy).
 
     ``noise=1.6`` puts the reduced benchmark at ~0.98 clean accuracy —
     *off* the 1.0 ceiling.  At lower noise the template task is linearly
     separable with such wide logit margins that soft errors almost never
     flip an argmax, which hides the paper's fault-sensitivity phenomenology
     entirely (see tests/test_cnn_crosslayer.py).  Keep this in sync with
-    ``repro.core.evaluate.CnnOracle.noise``."""
+    ``repro.core.evaluate.CnnOracle.noise``.
+
+    Fault-aware training (FAT): ``fat`` names a protection policy (or passes
+    one) whose fault model the network trains *through* — the forward runs
+    the faulty quantized datapath bit-exactly, gradients flow straight-
+    through (``protect_linear_ste``).  The BER ramps linearly 0 -> ``fat_ber``
+    over ``fat_ramp`` steps (default ``steps // 2``) and is the only traced
+    leaf, so the whole schedule shares one executable.  Data and fault draws
+    come from separate folds of the per-step key (FTL001: the streams can
+    never collide).  Clean accuracy is evaluated fault-free either way, so
+    FAT and baseline networks are compared at matched clean accuracy.
+    """
     from repro.data.pipeline import vision_batch
     params = init_cnn(key, cfg)
     mom = jax.tree.map(jnp.zeros_like, params)
+    pol = None
+    if fat is not None:
+        from repro.ft import as_policy
+        pol = as_policy(fat)
+        ramp = steps // 2 if fat_ramp is None else fat_ramp
 
     @jax.jit
-    def step(params, mom, k):
+    def step(params, mom, k, ber):
         imgs, labels = vision_batch(k, batch, cfg.n_classes, cfg.hw,
                                     noise=noise, seed=data_seed)
+        ftc = None
+        if pol is not None:
+            from repro.models.common import FTCtx
+            ftc = FTCtx(pol.with_ber(ber), jax.random.fold_in(k, 1),
+                        ste=True)
+
         def loss_fn(p):
-            return xent_loss(apply_cnn(p, cfg, imgs), labels)
+            return xent_loss(apply_cnn(p, cfg, imgs, ftc=ftc), labels)
         g = jax.grad(loss_fn)(params)
         mom = jax.tree.map(lambda m, gg: 0.9 * m + gg, mom, g)
         params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
         return params, mom
 
     for i in range(steps):
-        params, mom = step(params, mom, jax.random.fold_in(key, i))
+        ber = 0.0
+        if pol is not None:
+            ber = fat_ber * min(i / ramp, 1.0) if ramp > 0 else fat_ber
+        params, mom = step(params, mom, jax.random.fold_in(key, i),
+                           jnp.float32(ber))
     imgs, labels = vision_batch(jax.random.PRNGKey(7), 512, cfg.n_classes,
                                 cfg.hw, noise=noise, seed=data_seed)
     acc = float(accuracy(apply_cnn(params, cfg, imgs), labels))

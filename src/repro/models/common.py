@@ -100,11 +100,17 @@ class FTCtx:
     forward) or a (B, 2) batch of keys — one *independent* stream per batch
     row, so a serving batch keeps per-request fault accounting: row b's
     draws (and its quantization scales) depend only on row b (reference
-    backend, weight_faults=False; see ``repro.serve.scheduler``)."""
+    backend, weight_faults=False; see ``repro.serve.scheduler``).
+
+    ``ste=True`` routes every site through ``protect_linear_ste`` — forward
+    bit-identical to the faulty datapath, backward the clean-matmul
+    straight-through gradient — which is what fault-aware training (FAT)
+    threads into the train step (see ``repro.train.train_step`` and
+    docs/training.md)."""
 
     def __init__(self, ft, key, masks=None, protected_layers=None,
                  backend: str = "reference", t=None, interpret: bool = True,
-                 dyn=None):
+                 dyn=None, ste: bool = False):
         from repro.ft import as_policy
         self.ft = as_policy(ft)
         self.key = key
@@ -114,6 +120,7 @@ class FTCtx:
         self.t = t
         self.interpret = interpret
         self.dyn = dyn
+        self.ste = ste
 
     def site_key(self, name: str):
         import zlib
@@ -146,7 +153,8 @@ def linear(x: jax.Array, w: jax.Array, b=None, *,
         y = x @ w.reshape(w.shape[0], -1)
         y = y.reshape(*x.shape[:-1], *w.shape[1:])
     else:
-        from repro.ft import protect_linear
+        from repro.ft import protect_linear, protect_linear_ste
+        pl = protect_linear_ste if ftc.ste else protect_linear
         w2 = w.reshape(w.shape[0], -1).astype(jnp.float32)
         imp = ftc.masks.get(name)
         prot = (ftc.protected_layers is None
@@ -159,13 +167,13 @@ def linear(x: jax.Array, w: jax.Array, b=None, *,
             reps = max(x.size // x.shape[-1], 1) // sk.shape[0]
             if reps != 1:
                 sk = jnp.repeat(sk, reps, axis=0)
-        y = protect_linear(sk,
-                           x.astype(jnp.float32).reshape(-1, w.shape[0]),
-                           w2, ftc.ft,
-                           important=None if imp is None else jnp.asarray(imp),
-                           layer_protected=prot, backend=ftc.backend,
-                           t=ftc.site_t(name), interpret=ftc.interpret,
-                           dyn=ftc.dyn)
+        y = pl(sk,
+               x.astype(jnp.float32).reshape(-1, w.shape[0]),
+               w2, ftc.ft,
+               important=None if imp is None else jnp.asarray(imp),
+               layer_protected=prot, backend=ftc.backend,
+               t=ftc.site_t(name), interpret=ftc.interpret,
+               dyn=ftc.dyn)
         y = y.reshape(*x.shape[:-1], *w.shape[1:]).astype(x.dtype)
     if b is not None:
         y = y + b.astype(y.dtype)

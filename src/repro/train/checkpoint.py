@@ -21,6 +21,38 @@ import jax
 import numpy as np
 
 
+class _Waiter:
+    """Handle for an async checkpoint write.
+
+    ``join()`` blocks until the writer finishes and *re-raises* any failure,
+    so a crashed background write can never be silently mistaken for a
+    committed checkpoint — the caller that joins (the trainer, before
+    starting the next writer or returning) fails loudly instead.  The commit
+    marker is only written after a fully successful write, so even an
+    unjoined crash leaves the previous committed step as restore target.
+    """
+
+    def __init__(self, target):
+        self._exc: BaseException | None = None
+
+        def _run():
+            try:
+                target()
+            except BaseException as e:   # re-raised at join()
+                self._exc = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def join(self, timeout: float | None = None) -> None:
+        self._thread.join(timeout)
+        if self._exc is not None:
+            raise self._exc
+
+    def is_alive(self) -> bool:
+        return self._thread.is_alive()
+
+
 def _flatten(tree):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = {}
@@ -54,14 +86,16 @@ def save(ckpt_dir: str, state, step: int, data_state: dict | None = None,
         _gc(ckpt_dir, keep)
 
     if async_write:
-        t = threading.Thread(target=_write, daemon=True)
-        t.start()
-        return t
+        return _Waiter(_write)
     _write()
     return None
 
 
 def _gc(ckpt_dir: str, keep: int):
+    """Prune to the newest ``keep`` *committed* steps (``keep=0`` keeps all).
+    Operating on ``available_steps`` means the newest committed step is
+    always in the survivor slice, and half-written (uncommitted) dirs are
+    never touched — they stay invisible to restore either way."""
     steps = sorted(available_steps(ckpt_dir))
     for s in steps[:-keep] if keep else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)

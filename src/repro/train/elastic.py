@@ -4,7 +4,16 @@ The FSDP ('data') axis absorbs the size change; 'model' stays fixed so the
 TP layout (and therefore every kernel's tile shapes) is stable.  Because
 checkpoints are mesh-agnostic (named leaves, full logical shapes), rescaling
 is: build new mesh -> recompute shardings -> restore -> continue.  The
-global batch is preserved by raising grad_accum when the DP world shrinks.
+global batch is preserved *exactly* by raising grad_accum when the DP world
+shrinks: the new data axis is the largest divisor of the old one that fits
+the survivors, so ``new_dp * grad_accum_scale == old_dp`` always holds (a
+non-divisor dp would silently change the global batch and the loss curve).
+Gained capacity beyond the old world is left idle rather than grown into —
+growing dp would need grad_accum *division*, which is not generally integer.
+
+The closed loop lives on the Trainer: ``simulate_device_loss`` ->
+``Trainer.handle_device_loss`` (plan_rescale + survivor_mesh +
+remesh_restore) -> ``Trainer.run(state, step)``.
 """
 from __future__ import annotations
 
@@ -27,12 +36,42 @@ class ElasticPlan:
 
 
 def plan_rescale(old_mesh, surviving_devices: int, model_axis: int) -> ElasticPlan:
-    """Choose the largest data axis that fits the survivors."""
+    """Choose the largest data axis that fits the survivors.
+
+    Invariants (property-tested in tests/test_elastic_props.py):
+      * ``1 <= new_dp <= old_dp`` and ``old_dp % new_dp == 0``
+      * ``new_dp * grad_accum_scale == old_dp``  (global batch preserved)
+      * nothing changed => identity plan (idempotent)
+    """
     old_dp = old_mesh.shape.get("data", 1) * old_mesh.shape.get("pod", 1)
-    new_dp = max(surviving_devices // model_axis, 1)
-    # keep global batch: if dp halves, double accumulation
-    scale = max(old_dp // new_dp, 1)
-    return ElasticPlan(old_dp=old_dp, new_dp=new_dp, grad_accum_scale=scale)
+    fit = max(surviving_devices // model_axis, 1)
+    # keep global batch: new_dp must divide old_dp so the lost parallelism
+    # converts exactly into extra accumulation steps
+    new_dp = max(d for d in range(1, old_dp + 1)
+                 if old_dp % d == 0 and d <= fit)
+    return ElasticPlan(old_dp=old_dp, new_dp=new_dp,
+                       grad_accum_scale=old_dp // new_dp)
+
+
+def simulate_device_loss(mesh, n_lost: int) -> list:
+    """Drop the last ``n_lost`` devices of the mesh — the test/benchmark
+    stand-in for a real host failure.  Returns the surviving device list."""
+    devices = list(mesh.devices.flat)
+    if not 0 <= n_lost < len(devices):
+        raise ValueError(f"cannot lose {n_lost} of {len(devices)} devices")
+    return devices[:len(devices) - n_lost]
+
+
+def survivor_mesh(plan: ElasticPlan, model_axis: int, devices: list):
+    """Build the (data, model) mesh of the rescale plan over survivors."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    need = plan.new_dp * model_axis
+    if len(devices) < need:
+        raise ValueError(f"plan needs {need} devices, {len(devices)} survive")
+    grid = np.array(devices[:need]).reshape(plan.new_dp, model_axis)
+    return Mesh(grid, ("data", "model"))
 
 
 def remesh_restore(ckpt_dir: str, like_state, new_mesh):

@@ -5,6 +5,19 @@
   step(state, batch) -> (state, metrics)
 with optional microbatch gradient accumulation (lax.scan) and int8+error-
 feedback gradient compression on the accumulation carry.
+
+Fault-aware training (FAT): passing ``policy=`` threads a
+:class:`~repro.models.common.FTCtx` through the forward pass so the model
+trains *through* injected faults on the quantized DLA datapath
+(``protect_linear_ste``: forward bit-exact faulty, backward clean
+straight-through gradients).  The fault-key stream is derived *inside* the
+jitted step by folding the optimizer step counter (and the microbatch index
+under gradient accumulation) from one root key — no key reuse across steps,
+and a run resumed from a checkpoint continues the exact stream because the
+step counter restores with the state.  The BER ramp (``fat_ramp``) is a
+traced function of the same counter, so the whole schedule runs under one
+executable: the policy structure stays static metadata and the per-step BER
+is the policy pytree's single dynamic leaf (see docs/training.md).
 """
 from __future__ import annotations
 
@@ -12,23 +25,45 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.faults import fold_stream
 from repro.optim import AdamWConfig, adamw_update, init_opt_state
 from repro.parallel import sharding as S
 from repro.parallel.ctx import mesh_ctx
 
 
 def make_loss_fn(model):
-    def loss_fn(params, batch):
-        loss, metrics = model.loss(params, batch)
+    def loss_fn(params, batch, ftc=None):
+        loss, metrics = model.loss(params, batch, ftc=ftc)
         return loss, metrics
     return loss_fn
 
 
-def _accumulate(loss_fn, params, batch, n_accum: int):
-    """Scan over microbatches; returns (loss, grads) averaged."""
+def fat_ber_at(target_ber: float, ramp_steps: int, step):
+    """Linear BER warm-up 0 -> ``target_ber`` over ``ramp_steps`` updates.
+
+    ``step`` may be traced (the in-jit optimizer counter): the returned BER
+    is then the traced scalar that rides the policy pytree's dynamic leaf.
+    Ramping keeps the early optimization on a mostly-clean loss surface so
+    FAT reaches the same clean accuracy as a baseline run, then anneals the
+    fault pressure up to the deployment operating point.
+    """
+    step = jnp.asarray(step, jnp.float32)
+    frac = (jnp.clip(step / float(ramp_steps), 0.0, 1.0) if ramp_steps > 0
+            else jnp.float32(1.0))
+    return jnp.float32(target_ber) * frac
+
+
+def _accumulate(loss_fn, params, batch, n_accum: int, ftc_at=None):
+    """Scan over microbatches; returns (loss, grads) averaged.
+
+    ``ftc_at(i)`` builds the fault context for microbatch ``i`` (traced
+    index), so under gradient accumulation each microbatch draws from its
+    own fold of the step key — the microbatch axis of the key-stream
+    contract."""
     if n_accum <= 1:
+        ftc = None if ftc_at is None else ftc_at(jnp.int32(0))
         (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch)
+            params, batch, ftc)
         return loss, grads
 
     def slice_mb(x):
@@ -38,10 +73,12 @@ def _accumulate(loss_fn, params, batch, n_accum: int):
 
     mbs = jax.tree.map(slice_mb, batch)
 
-    def body(carry, mb):
+    def body(carry, xs):
+        mb, idx = xs
         loss_acc, grads_acc = carry
+        ftc = None if ftc_at is None else ftc_at(idx)
         (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, mb)
+            params, mb, ftc)
         grads_acc = jax.tree.map(
             lambda a, g: a + g.astype(a.dtype), grads_acc, grads)
         return (loss_acc + loss, grads_acc), None
@@ -49,7 +86,8 @@ def _accumulate(loss_fn, params, batch, n_accum: int):
     # accumulate in the parameter dtype: an f32 accumulator for a 235B-param
     # MoE costs ~10 GiB/device of extra state; AdamW upcasts to f32 anyway
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
-    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), mbs)
+    (loss, grads), _ = jax.lax.scan(
+        body, (jnp.zeros(()), zeros), (mbs, jnp.arange(n_accum)))
     inv = 1.0 / n_accum
     return loss * inv, jax.tree.map(lambda g: g * inv, grads)
 
@@ -72,22 +110,57 @@ def state_shardings(state_spec_tree, mesh):
     return jax.tree_util.tree_map_with_path(one, state_spec_tree)
 
 
-def make_train_step(model, opt_cfg: AdamWConfig, mesh=None, donate=True):
+def make_train_step(model, opt_cfg: AdamWConfig, mesh=None, donate=True,
+                    policy=None, ft_ber: float | None = None, ft_key=None,
+                    fat_ramp: int = 0, ft_backend: str = "reference",
+                    masks=None):
     """Returns (step_fn, jit_step).  With a mesh, in/out shardings are set and
-    the model runs under the mesh context so activation constraints apply."""
+    the model runs under the mesh context so activation constraints apply.
+
+    FAT arguments (all optional; ``policy=None`` is the clean step):
+      policy: a ProtectionPolicy or registry name — the fault model the
+        network trains through.  Resolved on the host; its structure is
+        static, only the per-step BER traces.
+      ft_ber: target training BER (defaults to ``policy.ber``).
+      ft_key: root PRNG key of the fault stream (defaults to
+        ``PRNGKey(policy.seed)``).  Per-step/per-microbatch keys are folded
+        from it inside the jitted step: ``fold_stream(ft_key, step, mb)``.
+      fat_ramp: steps of linear BER warm-up (see :func:`fat_ber_at`).
+      masks: optional per-site importance masks for recompute policies.
+    """
+    from repro.ft import as_policy
+    from repro.models.common import FTCtx
+
     n_accum = model.run.grad_accum
     loss_fn = make_loss_fn(model)
+    pol = as_policy(policy)
+    if pol is not None:
+        target_ber = float(pol.ber if ft_ber is None else ft_ber)
+        root_key = (ft_key if ft_key is not None
+                    else jax.random.PRNGKey(pol.seed))
 
     def step(state, batch):
         ctx = S.make_ctx(mesh) if mesh is not None else None
         with mesh_ctx(ctx):
-            loss, grads = _accumulate(loss_fn, state["params"], batch, n_accum)
+            ftc_at, fat_metrics = None, {}
+            if pol is not None:
+                ber_t = fat_ber_at(target_ber, fat_ramp, state["step"])
+                pol_t = pol.with_ber(ber_t)
+                k_step = fold_stream(root_key, state["step"])
+
+                def ftc_at(i):
+                    return FTCtx(pol_t, fold_stream(k_step, i), masks,
+                                 backend=ft_backend, ste=True)
+
+                fat_metrics = {"fat_ber": ber_t}
+            loss, grads = _accumulate(loss_fn, state["params"], batch,
+                                      n_accum, ftc_at)
             opt_state = {"m": state["m"], "v": state["v"],
                          "step": state["step"]}
             new_p, new_opt, om = adamw_update(grads, opt_state,
                                               state["params"], opt_cfg)
         new_state = {"params": new_p, **new_opt}
-        return new_state, {"loss": loss, **om}
+        return new_state, {"loss": loss, **om, **fat_metrics}
 
     if mesh is None:
         return step, jax.jit(step, donate_argnums=(0,) if donate else ())

@@ -1,15 +1,27 @@
 """Training loop with cluster-level fault tolerance.
 
 - step-atomic checkpoints (async write) + resume-from-latest with data state
-- straggler mitigation: steps slower than `straggler_factor` x the running
-  median are logged and counted; past `straggler_patience` consecutive slow
-  steps the trainer requests a checkpoint so a reschedule loses nothing
+- fault-aware training (FAT): ``TrainerConfig.fat_policy`` threads the
+  ``repro.ft`` protection stack through the forward pass so the network
+  trains through injected faults (per-step/per-microbatch key streams are
+  folded from the restored step counter inside the jitted step, so a resumed
+  run continues the exact fault stream — see docs/training.md)
+- straggler mitigation: steps slower than `straggler_factor` x the median of
+  a bounded window of recent step times are logged and counted; past
+  `straggler_patience` consecutive slow steps the trainer requests a
+  checkpoint so a reschedule loses nothing.  The first step of every run
+  (the compile step) is excluded from the window
   (on CPU CI this is exercised via an injected delay hook)
-- elastic re-mesh: on simulated node loss, rebuild the mesh from survivors
-  and restore the state onto the new shardings (see repro.train.elastic)
+- elastic re-mesh: on (simulated) node loss, ``handle_device_loss`` closes
+  the loop — plan the rescale, rebuild the mesh from survivors, scale
+  grad_accum to preserve the global batch, restore the latest committed
+  checkpoint onto the new shardings, and hand back (state, step) so ``run``
+  continues (see repro.train.elastic)
 """
 from __future__ import annotations
 
+import bisect
+import collections
 import dataclasses
 import json
 import os
@@ -33,7 +45,41 @@ class TrainerConfig:
     log_every: int = 10
     straggler_factor: float = 3.0
     straggler_patience: int = 3
+    straggler_window: int = 64   # step-time samples the median is taken over
     seed: int = 0
+    # ---- fault-aware training (FAT) schedule ----
+    fat_policy: str | None = None   # registry policy name (None = clean)
+    fat_ber: float = 0.0            # target training BER at end of ramp
+    fat_ramp: int = 0               # linear 0 -> fat_ber over this many steps
+    fat_seed: int = 17              # root of the training fault-key stream
+
+
+class _RunningMedian:
+    """Median over a bounded window of recent samples.
+
+    A deque tracks arrival order, a sorted list tracks rank order; adding a
+    sample is one ``insort`` plus (once full) one ``bisect`` removal —
+    O(window) bounded work per step instead of re-sorting the entire run
+    history (O(n log n) *per step*, O(n^2 log n) over a long run)."""
+
+    def __init__(self, window: int):
+        self.window = max(int(window), 1)
+        self._fifo: collections.deque = collections.deque()
+        self._sorted: list[float] = []
+
+    def add(self, x: float) -> None:
+        self._fifo.append(x)
+        bisect.insort(self._sorted, x)
+        if len(self._fifo) > self.window:
+            old = self._fifo.popleft()
+            del self._sorted[bisect.bisect_left(self._sorted, old)]
+
+    def __len__(self) -> int:
+        return len(self._fifo)
+
+    @property
+    def median(self) -> float:
+        return self._sorted[len(self._sorted) // 2]
 
 
 class Trainer:
@@ -47,16 +93,29 @@ class Trainer:
         self.mesh = mesh
         self.delay_hook = delay_hook  # tests inject artificial stragglers
         self.data = LMIterator(model.cfg, shape, data_cfg)
-        _, self.jit_step = make_train_step(model, self.opt_cfg, mesh=mesh)
+        self._build_step()
         self.metrics_log: list[dict] = []
         self.straggler_events = 0
         self._slow_streak = 0
 
+    def _build_step(self):
+        c = self.cfg
+        fat = {}
+        if c.fat_policy is not None:
+            fat = dict(policy=c.fat_policy, ft_ber=c.fat_ber,
+                       ft_key=jax.random.PRNGKey(c.fat_seed),
+                       fat_ramp=c.fat_ramp)
+        _, self.jit_step = make_train_step(self.model, self.opt_cfg,
+                                           mesh=self.mesh, **fat)
+
     # ------------------------------------------------------------ state ---
-    def init_or_restore(self):
-        like = jax.eval_shape(
+    def _state_like(self):
+        return jax.eval_shape(
             lambda k: init_state(self.model, k, self.opt_cfg),
             jax.random.PRNGKey(self.cfg.seed))
+
+    def init_or_restore(self):
+        like = self._state_like()
         sh = (state_shardings(like, self.mesh) if self.mesh is not None
               else None)
         state, step, dstate = ckpt.restore(self.cfg.ckpt_dir, like,
@@ -70,12 +129,46 @@ class Trainer:
             self.data.restore(dstate)
         return state, step
 
+    # ---------------------------------------------------------- elastic ---
+    def handle_device_loss(self, surviving_devices):
+        """Close the elastic loop after losing devices: plan -> re-mesh ->
+        restore-from-latest -> ready to continue.
+
+        ``surviving_devices`` is the list of live devices (or their count —
+        the first N of the old mesh are then assumed alive).  The global
+        batch is preserved by scaling ``grad_accum`` by the plan's factor;
+        the step function is rebuilt for the new mesh (same FAT schedule —
+        the restored step counter keeps the fault stream on its coordinate).
+        Returns ``(state, step)`` for :meth:`run`.
+        """
+        from repro.train import elastic
+
+        if self.mesh is None:
+            raise ValueError("elastic rescale needs a mesh-backed trainer")
+        devices = (list(surviving_devices)
+                   if not isinstance(surviving_devices, int)
+                   else list(self.mesh.devices.flat)[:surviving_devices])
+        model_axis = self.mesh.shape.get("model", 1)
+        plan = elastic.plan_rescale(self.mesh, len(devices), model_axis)
+        self.mesh = elastic.survivor_mesh(plan, model_axis, devices)
+        if plan.grad_accum_scale != 1:
+            run2 = dataclasses.replace(
+                self.model.run,
+                grad_accum=self.model.run.grad_accum * plan.grad_accum_scale)
+            self.model = dataclasses.replace(self.model, run=run2)
+        self._build_step()
+        state, step, dstate, _ = elastic.remesh_restore(
+            self.cfg.ckpt_dir, self._state_like(), self.mesh)
+        self.data.restore(dstate)
+        return state, int(step)
+
     # ------------------------------------------------------------- loop ---
     def run(self, state=None, start_step: int | None = None):
         if state is None:
             state, start_step = self.init_or_restore()
         step = start_step or 0
-        durations: list[float] = []
+        med = _RunningMedian(self.cfg.straggler_window)
+        compile_step = True   # first step per run() pays compilation
         waiter = None
         while step < self.cfg.total_steps:
             batch = next(self.data)
@@ -85,10 +178,12 @@ class Trainer:
             state, metrics = self.jit_step(state, batch)
             loss = float(metrics["loss"])  # blocks; also a health check
             dt = time.monotonic() - t0
-            durations.append(dt)
-            med = sorted(durations)[len(durations) // 2]
-            is_straggler = (len(durations) >= 5
-                            and dt > self.cfg.straggler_factor * med)
+            is_straggler = (not compile_step and len(med) >= 5
+                            and dt > self.cfg.straggler_factor * med.median)
+            if compile_step:
+                compile_step = False   # compile time never enters the window
+            else:
+                med.add(dt)
             if is_straggler:
                 self.straggler_events += 1
                 self._slow_streak += 1
@@ -98,6 +193,8 @@ class Trainer:
             row = {"step": step, "loss": loss, "sec": dt,
                    "straggler": is_straggler,
                    "grad_norm": float(metrics["grad_norm"])}
+            if "fat_ber" in metrics:
+                row["fat_ber"] = float(metrics["fat_ber"])
             self.metrics_log.append(row)
             if step % self.cfg.log_every == 0:
                 print(json.dumps(row))
@@ -106,7 +203,7 @@ class Trainer:
                          or self._slow_streak >= self.cfg.straggler_patience)
             if must_ckpt:
                 if waiter is not None:
-                    waiter.join()
+                    waiter.join()   # serialize writers: never two in flight
                 waiter = ckpt.save(self.cfg.ckpt_dir, state, step,
                                    data_state=self.data.state(),
                                    keep=self.cfg.keep,

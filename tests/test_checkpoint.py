@@ -46,3 +46,53 @@ def test_async_save(tmp_path):
     t = C.save(d, state(), 9, async_write=True)
     t.join()
     assert C.available_steps(d) == [9]
+
+
+# ---------------------------------------------------------------------------
+# Crash safety: a writer killed mid-save must never eat the previous
+# committed checkpoint, and an async failure must surface at join().
+# ---------------------------------------------------------------------------
+def _crashing_savez(monkeypatch):
+    def boom(*a, **kw):
+        raise IOError("disk died mid-write")
+    monkeypatch.setattr(C.np, "savez", boom)
+
+
+def test_sync_crash_mid_save_keeps_previous(tmp_path, monkeypatch):
+    d = str(tmp_path / "ck")
+    C.save(d, state(), 1)
+    _crashing_savez(monkeypatch)
+    import pytest
+    with pytest.raises(IOError):
+        C.save(d, state(), 2)
+    assert C.available_steps(d) == [1]
+    s, step, _ = C.restore(d, state())
+    assert step == 1 and s is not None
+
+
+def test_async_crash_raises_at_join_and_keeps_previous(tmp_path, monkeypatch):
+    d = str(tmp_path / "ck")
+    C.save(d, state(), 3)
+    _crashing_savez(monkeypatch)
+    w = C.save(d, state(), 4, async_write=True)
+    import pytest
+    with pytest.raises(IOError):
+        w.join()
+    assert not w.is_alive()
+    assert C.available_steps(d) == [3]
+    _, step, _ = C.restore(d, state())
+    assert step == 3
+
+
+def test_gc_never_deletes_newest_committed(tmp_path):
+    d = str(tmp_path / "ck")
+    for i in (1, 2, 3, 4):
+        C.save(d, state(), i, keep=1)
+        assert C.available_steps(d) == [i]   # newest always survives pruning
+
+
+def test_gc_keep_zero_keeps_all(tmp_path):
+    d = str(tmp_path / "ck")
+    for i in (1, 2, 3, 4, 5):
+        C.save(d, state(), i, keep=0)
+    assert C.available_steps(d) == [1, 2, 3, 4, 5]

@@ -1,0 +1,51 @@
+"""Property-based invariants of the elastic rescale plan (hypothesis).
+
+The deterministic grid lives in tests/test_elastic.py; these properties pin
+the contract for *all* (old_dp, survivors, model_axis) combinations:
+
+  * validity:        1 <= new_dp <= old_dp and new_dp fits the survivors
+  * divisibility:    old_dp % new_dp == 0
+  * batch preserved: new_dp * grad_accum_scale == old_dp
+  * idempotence:     a plan applied to its own outcome changes nothing
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.train.elastic import plan_rescale  # noqa: E402
+
+
+class _MeshLike:
+    def __init__(self, dp):
+        self.shape = {"data": dp, "model": 1}
+
+
+@settings(max_examples=200, deadline=None)
+@given(old_dp=st.integers(1, 64), lost=st.integers(0, 63),
+       model_axis=st.integers(1, 8))
+def test_plan_invariants(old_dp, lost, model_axis):
+    total = old_dp * model_axis
+    surviving = max(total - lost, 1)
+    plan = plan_rescale(_MeshLike(old_dp), surviving, model_axis)
+    assert 1 <= plan.new_dp <= old_dp
+    assert old_dp % plan.new_dp == 0
+    assert plan.new_dp * plan.grad_accum_scale == old_dp
+    if surviving >= model_axis:
+        assert plan.new_dp * model_axis <= max(surviving, model_axis)
+
+
+@settings(max_examples=100, deadline=None)
+@given(old_dp=st.integers(1, 64), lost=st.integers(0, 63),
+       model_axis=st.integers(1, 8))
+def test_plan_idempotent(old_dp, lost, model_axis):
+    """Re-planning from the post-rescale world with no further loss is the
+    identity: the closed loop converges in one application."""
+    total = old_dp * model_axis
+    surviving = max(total - lost, 1)
+    plan = plan_rescale(_MeshLike(old_dp), surviving, model_axis)
+    again = plan_rescale(_MeshLike(plan.new_dp),
+                         plan.new_dp * model_axis, model_axis)
+    assert again.new_dp == plan.new_dp
+    assert again.grad_accum_scale == 1
+    assert not again.changed

@@ -1,9 +1,14 @@
-"""Training loop: loss goes down, checkpoint/restart is bit-exact, straggler
-mitigation triggers, gradient accumulation is consistent."""
+"""Training loop: loss goes down, checkpoint/restart is bit-exact (clean and
+fault-aware), straggler mitigation triggers on a bounded window, async
+checkpoint writers never interleave, gradient accumulation is consistent."""
+
+import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.configs.base import RunConfig, ShapeConfig
@@ -75,6 +80,125 @@ def test_straggler_detection_and_ckpt(tmp_path):
     assert tr.straggler_events >= 2
     from repro.train import checkpoint as C
     assert C.available_steps(str(tmp_path / "s"))  # emergency ckpt written
+
+
+def test_running_median_tracks_sliding_window():
+    """_RunningMedian == upper median of the trailing window, at any point."""
+    from repro.train.trainer import _RunningMedian
+    xs = list(np.random.default_rng(0).uniform(0.01, 2.0, size=300))
+    m = _RunningMedian(16)
+    for i, x in enumerate(xs):
+        m.add(x)
+        window = xs[max(0, i - 15):i + 1]
+        assert len(m) == len(window)
+        assert m.median == sorted(window)[len(window) // 2]
+
+
+def test_compile_step_excluded_from_straggler_window(tmp_path):
+    """The first step of a run pays XLA compilation; it must neither count
+    as a straggler nor contaminate the step-time median."""
+    m = tiny_model()
+
+    def delay(step):
+        if step == 0:
+            time.sleep(1.0)   # exaggerate the compile step
+
+    tc = TrainerConfig(total_steps=10, ckpt_every=1000, log_every=1000,
+                       ckpt_dir=str(tmp_path / "w"), ckpt_async=False,
+                       straggler_factor=3.0, straggler_window=8)
+    tr = Trainer(m, SHAPE, AdamWConfig(), tc, delay_hook=delay)
+    tr.run()
+    assert tr.straggler_events == 0
+    assert not tr.metrics_log[0]["straggler"]
+
+
+def test_async_ckpt_writers_never_interleave(tmp_path):
+    """ckpt_every=1 with slow async writes: the join-before-save ordering
+    must keep at most one writer in flight at any moment."""
+    from repro.train import checkpoint as C
+    import threading
+
+    live = {"cur": 0, "max": 0}
+    lock = threading.Lock()
+    orig = C.np.savez
+
+    def slow_savez(*a, **kw):
+        with lock:
+            live["cur"] += 1
+            live["max"] = max(live["max"], live["cur"])
+        time.sleep(0.05)
+        try:
+            return orig(*a, **kw)
+        finally:
+            with lock:
+                live["cur"] -= 1
+
+    m = tiny_model()
+    tc = TrainerConfig(total_steps=6, ckpt_every=1, log_every=1000,
+                       ckpt_dir=str(tmp_path / "q"), ckpt_async=True)
+    tr = Trainer(m, SHAPE, AdamWConfig(), tc)
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(C.np, "savez", slow_savez)
+        tr.run()
+    assert live["max"] == 1, live
+    assert C.available_steps(str(tmp_path / "q"))[-1] == 6
+
+
+# ------------------------------------------------------------------ FAT ---
+FAT_KW = dict(fat_policy="cl", fat_ber=1e-3, fat_ramp=6, fat_seed=17)
+FAT_SHAPE = ShapeConfig("tiny", "train", 32, 4)
+
+
+def fat_tiny_model():
+    # 1 layer: the FT stack traces every linear site, so compile cost scales
+    # with depth — one block keeps three trainer builds tier-1-sized
+    cfg = dataclasses.replace(get_config("h2o-danube-1.8b", reduced=True),
+                              n_layers=1)
+    return build(cfg, RunConfig(param_dtype="float32",
+                                compute_dtype="float32"))
+
+
+def test_fat_resume_determinism(tmp_path):
+    """Interrupt-at-k + resume == uninterrupted, bit for bit, *with faults
+    on*: params AND per-step (loss, fat_ber) metrics.  This pins the whole
+    key-stream contract — the resumed run folds its fault keys from the
+    restored step counter (never replaying step 0's draws), the BER ramp is
+    a function of the same counter, and the data iterator restores its
+    position from the checkpoint's data_state."""
+    m = fat_tiny_model()
+    opt = AdamWConfig(lr=1e-3)
+    tc1 = TrainerConfig(total_steps=8, ckpt_every=100, log_every=1000,
+                        ckpt_dir=str(tmp_path / "a"), ckpt_async=False,
+                        **FAT_KW)
+    t1 = Trainer(m, FAT_SHAPE, opt, tc1)
+    s1, _ = t1.run()
+    # the ramp actually ramps: monotone, hits the target, and is logged
+    bers = [r["fat_ber"] for r in t1.metrics_log]
+    assert bers == sorted(bers)
+    assert bers[0] == 0.0 and bers[-1] == pytest.approx(1e-3)
+
+    tc2 = TrainerConfig(total_steps=4, ckpt_every=4, log_every=1000,
+                        ckpt_dir=str(tmp_path / "b"), ckpt_async=False,
+                        **FAT_KW)
+    t2 = Trainer(m, FAT_SHAPE, opt, tc2)
+    t2.run()
+    tc3 = TrainerConfig(total_steps=8, ckpt_every=100, log_every=1000,
+                        ckpt_dir=str(tmp_path / "b"), ckpt_async=False,
+                        **FAT_KW)
+    t3 = Trainer(m, FAT_SHAPE, opt, tc3)
+    s3, step3 = t3.init_or_restore()
+    assert step3 == 4
+    s3, _ = t3.run(s3, step3)
+
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s3)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    cont = {r["step"]: r for r in t1.metrics_log}
+    for r in t3.metrics_log:
+        assert r["loss"] == cont[r["step"]]["loss"], r["step"]
+        assert r["fat_ber"] == cont[r["step"]]["fat_ber"], r["step"]
+    # the resumed step is step 5's coordinate, not a replay of step 1
+    assert t3.metrics_log[0]["step"] == 5
+    assert t3.metrics_log[0]["loss"] != t1.metrics_log[0]["loss"]
 
 
 def test_grad_accum_matches_single_batch():

@@ -40,7 +40,8 @@ DERIVATIONS = {"split", "fold_in", "PRNGKey", "key", "wrap_key_data",
 # repo-local functions whose first positional key argument is a sink
 CONSUMERS = {
     "flip_bits", "inject_output_faults", "inject_weight_faults",
-    "random_planes", "protect_linear", "ft_linear", "vision_batch",
+    "random_planes", "protect_linear", "protect_linear_ste", "ft_linear",
+    "vision_batch",
 }
 
 KEY_PARAM_RE = re.compile(r"(^k$|^k[0-9]+$|key|rng)", re.IGNORECASE)
