@@ -22,7 +22,7 @@ def _benchmarks():
     from benchmarks import roofline as R
     from benchmarks.dse_batch import dse_batched_vs_sequential
     from benchmarks.fused_bench import fused_vs_composed
-    from benchmarks.serve_bench import serve_scan_vs_python
+    from benchmarks.serve_bench import serve_scaling, serve_scan_vs_python
     from benchmarks.train_bench import fat_dse, fat_vs_baseline
 
     def roofline_single():
@@ -48,6 +48,7 @@ def _benchmarks():
         "dse_batched_vs_sequential": dse_batched_vs_sequential,
         "fused_vs_composed": fused_vs_composed,
         "serve_scan_vs_python": serve_scan_vs_python,
+        "serve_scaling": serve_scaling,
         "fat_vs_baseline": fat_vs_baseline,
         "fat_dse": fat_dse,
         "roofline_single_pod": roofline_single,
@@ -56,8 +57,10 @@ def _benchmarks():
 
 
 # DSE entries rerun fault injection many times; the batched-vs-sequential
-# comparison deliberately includes a slow sequential arm.
-FAST_SKIP = {"fig15_table2_dse", "dse_batched_vs_sequential", "fat_dse"}
+# comparison deliberately includes a slow sequential arm.  serve_scaling
+# spawns one fresh-compile subprocess per (config, policy, device-count) arm.
+FAST_SKIP = {"fig15_table2_dse", "dse_batched_vs_sequential", "fat_dse",
+             "serve_scaling"}
 
 
 def main() -> None:

@@ -1,4 +1,4 @@
-"""serve_scan_vs_python — serving-path tokens/sec and host roundtrips.
+"""serve_scan_vs_python / serve_scaling — serving-path throughput.
 
 Measures the three serving paths on the reduced configs of three workload
 families (dense LM, MoE, vision-frontend VLM), clean and under a registry
@@ -15,9 +15,24 @@ host roundtrips (jitted executable invocations) per generation.  The scan
 path must cut roundtrips by >=5x vs the python loop at equal (bit-identical
 at temperature 0) outputs — that equality is enforced by
 tests/test_serve_engine.py; this benchmark measures the speed side.
+
+``serve_scaling`` measures sharded-serving throughput 1 -> N devices
+(dense vs MoE, clean vs crt3).  Each arm runs in a subprocess under
+``--xla_force_host_platform_device_count=N`` with a pure-DP (N, 1) mesh and
+a batch that grows with the device count — **weak scaling**: on the
+host-platform backend all N "devices" share the same cores, so per-device
+work is held constant and throughput rises as the batch amortizes the
+fixed per-step dispatch overhead.  On real accelerators the same harness
+measures strong scaling; the snapshot's meta block records which regime
+produced it.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -130,9 +145,118 @@ def serve_scan_vs_python():
     return rows, derived
 
 
+# ------------------------------------------------------- serve_scaling ----
+SCALE_DEVICES = (1, 2, 4)
+SCALE_CONFIGS = (("dense", "h2o-danube-1.8b"), ("moe", "qwen3-moe-235b-a22b"))
+SCALE_BASE_BATCH = 4
+SCALE_REPS = 3
+
+_SCALE_WORKER = """
+    import dataclasses, json, time
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro import ft
+    from repro.configs import get_config
+    from repro.models import build
+    from repro.serve.engine import Engine, ServeConfig
+
+    arch, pname, devices = {arch!r}, {policy!r}, {devices}
+    cfg = get_config(arch, reduced=True)
+    if cfg.moe is not None:
+        # capacity is per-shard: give headroom so no partitioning drops
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = Mesh(np.array(jax.devices()).reshape(devices, 1),
+                ("data", "model"))
+    B = {base_batch} * devices                     # weak scaling
+    batch = {{"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                           (B, {prompt}), 0, cfg.vocab)}}
+    policy = (None if pname is None
+              else ft.get_policy(pname, ber=1e-3, weight_faults=False))
+    eng = Engine(model, params, mesh=mesh,
+                 cfg=ServeConfig(max_new_tokens={new}), policy=policy)
+    jax.block_until_ready(eng.generate(batch, seed=0))      # compile
+    rates = []
+    for r in range({reps}):
+        t0 = time.perf_counter()
+        jax.block_until_ready(eng.generate(batch, seed=r))
+        rates.append(eng.stats.tokens / (time.perf_counter() - t0))
+    print(json.dumps({{"tok_s": sorted(rates)[len(rates) // 2]}}))
+"""
+
+
+def _scale_worker(arch, policy, devices):
+    env = dict(os.environ)
+    # same env the determinism battery documents for sharded serving, so the
+    # measured executable is the one whose outputs the tests pin down
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        "--xla_allow_excess_precision=false")
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent(_SCALE_WORKER.format(
+        arch=arch, policy=policy, devices=devices,
+        base_batch=SCALE_BASE_BATCH, prompt=PROMPT, new=NEW,
+        reps=SCALE_REPS))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1800, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"serve_scaling worker {arch}/{policy}/"
+                           f"{devices}dev failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])["tok_s"]
+
+
+def serve_scaling():
+    """Tokens/sec 1 -> N devices for the sharded Engine (weak scaling on the
+    host-platform backend; see module docstring)."""
+    rows = []
+    derived = {}
+    for fam, arch in SCALE_CONFIGS:
+        for pname in POLICIES:
+            tps = [_scale_worker(arch, pname, d) for d in SCALE_DEVICES]
+            label = f"{fam}_{pname or 'clean'}"
+            for d, t in zip(SCALE_DEVICES, tps):
+                rows.append(dict(family=fam, policy=pname or "clean",
+                                 devices=d,
+                                 batch=SCALE_BASE_BATCH * d,
+                                 tok_s=round(t, 1)))
+            derived[f"{label}_monotonic"] = bool(
+                all(b > a for a, b in zip(tps, tps[1:])))
+            derived[f"{label}_scaling_{SCALE_DEVICES[-1]}x"] = round(
+                tps[-1] / tps[0], 2)
+    return rows, derived
+
+
+def scaling_snapshot(path="BENCH_serve_scaling.json"):
+    """Commit-able snapshot of the serve_scaling sweep."""
+    rows, derived = serve_scaling()
+    meta = dict(
+        regime="weak",
+        note="host-platform devices share one CPU: batch grows with the "
+             "device count, so throughput rises by amortizing fixed "
+             "per-step dispatch overhead; on real accelerators the same "
+             "harness measures strong scaling",
+        devices=list(SCALE_DEVICES), base_batch=SCALE_BASE_BATCH,
+        prompt=PROMPT, new_tokens=NEW, mesh="(devices, 1) = (data, model)")
+    with open(path, "w") as f:
+        json.dump(dict(suite="serve_scaling", meta=meta, rows=rows,
+                       derived=derived), f, indent=1)
+        f.write("\n")
+    return path
+
+
 if __name__ == "__main__":
-    import json
-    rows, derived = serve_scan_vs_python()
-    for r in rows:
-        print(r)
-    print(json.dumps(derived))
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scaling", action="store_true",
+                    help="run serve_scaling and write BENCH_serve_scaling.json")
+    args = ap.parse_args()
+    if args.scaling:
+        p = scaling_snapshot()
+        print(f"# wrote {p}")
+        print(open(p).read())
+    else:
+        rows, derived = serve_scan_vs_python()
+        for r in rows:
+            print(r)
+        print(json.dumps(derived))

@@ -286,18 +286,21 @@ def trained_cnn(arch: str = "vgg", steps: int = 250) -> CnnOracle:
 @lru_cache(maxsize=8)
 def trained_cnn_fat(arch: str = "vgg", steps: int = 250,
                     fat_ber: float = 0.0,
-                    fat_policy: str = "cl") -> CnnOracle:
+                    fat_policy: str = "cl",
+                    fat_ramp: int | None = None) -> CnnOracle:
     """Fault-aware-trained benchmark CNN (``fat_ber=0`` is ``trained_cnn``).
 
     Same init key, data stream, and step budget as :func:`trained_cnn`, so
     a (baseline, FAT) pair differs only in the fault pressure seen during
-    training — the controlled comparison behind the ``fat_ber`` DSE axis."""
+    training — the controlled comparison behind the ``fat_ber`` DSE axis.
+    ``fat_ramp`` (default ``steps // 2``) sets the linear BER warm-up."""
     if fat_ber == 0.0:
         return trained_cnn(arch, steps)
     from repro.models.cnn import train_cnn
     cfg = CNNConfig(arch=arch)
     params, acc = train_cnn(jax.random.PRNGKey(0), cfg, steps=steps,
-                            fat=fat_policy, fat_ber=fat_ber)
+                            fat=fat_policy, fat_ber=fat_ber,
+                            fat_ramp=fat_ramp)
     o = CnnOracle(params, cfg)
     o.clean_acc = acc
     return o

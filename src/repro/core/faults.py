@@ -7,11 +7,27 @@ A TMR-protected bit only fails if >=2 of 3 replicas flip the same way, so a
 protected bit's *residual* flip probability is ``3*ber^2*(1-ber) + ber^3``.
 ``flip_bits`` takes a per-bit protection mask and applies the residual rate to
 protected bits instead of pretending they are perfectly immune.
+
+Partition invariance
+--------------------
+Every determinism contract in this repo (same fault draws at TP=1 and TP=N,
+alone-vs-crowded, checkpoint replay across topologies) rests on the PRNG being
+*counter-based*: element ``i`` of a draw is a pure function of (key, i), never
+of how the array is laid out across devices.  jax's legacy threefry lowering
+does not actually guarantee that under GSPMD — a sharded ``bernoulli`` can
+produce different bits than its unsharded trace — so importing this module
+switches on ``jax_threefry_partitionable``, the implementation that does.
+All draws in the repo go through this module, which keeps the stream
+consistent process-wide.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# The contract above is only true under the partitionable threefry lowering;
+# the legacy default reorders bits under GSPMD sharding.
+jax.config.update("jax_threefry_partitionable", True)
 
 
 def residual_ber(ber: float) -> float:
@@ -33,6 +49,23 @@ def fold_stream(key: jax.Array, *indices) -> jax.Array:
     """
     for i in indices:
         key = jax.random.fold_in(key, i)
+    return key
+
+
+def fold_axis_index(key: jax.Array, *axis_names: str) -> jax.Array:
+    """Per-shard key stream: fold this shard's mesh position into ``key``.
+
+    The jit/GSPMD path needs no per-shard keys — threefry is counter-based,
+    so a sharded ``flip_bits`` draws bit-identical values at TP=1 and TP=N.
+    Inside ``shard_map`` regions the program *is* per-shard, so any fault
+    draw there must address its stream by shard coordinate or every shard
+    would replay shard 0's draws.  The contract mirrors :func:`fold_stream`:
+    shard ``s`` along one axis draws from ``fold_stream(key, s)``, and
+    multiple axes fold in the order given, so a host-side loop over shards
+    can reproduce any shard's stream exactly.
+    """
+    for ax in axis_names:
+        key = jax.random.fold_in(key, jax.lax.axis_index(ax))
     return key
 
 

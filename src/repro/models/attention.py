@@ -159,6 +159,14 @@ def apply(p, x, *, cfg, run, kind, positions, probe=None, ftc=None,
         k = k.reshape(*x.shape[:-1], KH, Dh)
         v = v.reshape(*x.shape[:-1], KH, Dh)
         k = rope(k, positions, cfg.rope_theta)
+        # head-shard k/v like q: without this the residual stream's
+        # sequence sharding propagates into the kv length dim, turning the
+        # softmax p@v contraction into a partitioned float sum — a
+        # reordered accumulation that is not bitwise partition-invariant
+        # (the sharded-serving determinism contract, tests/
+        # test_serve_sharded.py)
+        k = ac(k, "dp", None, "tp", None)
+        v = ac(v, "dp", None, "tp", None)
     if not cross:
         q = rope(q, positions, cfg.rope_theta)
     q = (q * _scale(cfg)).astype(x.dtype)
@@ -185,8 +193,11 @@ def apply(p, x, *, cfg, run, kind, positions, probe=None, ftc=None,
         # masked tail slots never contribute)
         flat = (bt[:, :, None] * bs
                 + jnp.arange(bs)[None, None]).reshape(B, eff_cap)
-        kc = kp[flat]                                    # (B, C, KH, Dh)
-        vc = vp[flat]
+        # the pool is replicated over DP (global block ids) but the gathered
+        # per-row view is batch-major again — constrain it like the dense
+        # layout so attention runs DP/TP-sharded
+        kc = ac(kp[flat], "dp", None, "tp", None)        # (B, C, KH, Dh)
+        vc = ac(vp[flat], "dp", None, "tp", None)
         n_valid = jnp.minimum(pos + 1, window if window else eff_cap)
         o = _decode_attn(q, kc, vc, n_valid, cap=cfg.attn_softcap)
     elif mode == "decode" and not cross:

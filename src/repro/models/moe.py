@@ -12,6 +12,15 @@ working set O(T*k) instead of O(T*E*C).
 
 Expert weights are additionally FSDP-sharded over the DP axes; the shard_map
 boundary performs the per-layer FSDP all-gather.
+
+Fault layer: the router projection is the one MoE site under the paper's
+protection stack — it runs through ``common.linear`` (fault-tolerant DLA
+path) *outside* the shard_map region, where routing is row-local, so
+per-request fault accounting survives and the draws are partition-exact
+under GSPMD (counter-based RNG).  The expert einsums stay clean: their
+capacity buffers are shard-local (contents depend on the partitioning), so
+buffer-addressed fault draws there could never be partition-exact — any
+per-shard draws inside shard_map must use ``faults.fold_axis_index``.
 """
 from __future__ import annotations
 
@@ -19,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import activation, dense_init
+from repro.models.common import activation, dense_init, linear
 from repro.parallel import ctx as pctx
 from repro.parallel.compat import shard_map
 
@@ -42,16 +51,17 @@ def _expert_init(key, E, d_in, d_out, dtype):
     return jnp.stack([dense_init(k, d_in, d_out, dtype) for k in ks])
 
 
-def _local_moe(x, router_w, wi, wg, wo, *, e0, n_experts, top_k, capacity,
+def _local_moe(x, logits, wi, wg, wo, *, e0, n_experts, top_k, capacity,
                act_name, tp_axis=None):
-    """Per-shard MoE over local experts [e0, e0+E_local).  x: (B, S, D)."""
+    """Per-shard MoE over local experts [e0, e0+E_local).  x: (B, S, D);
+    logits: (B, S, E) pre-computed router logits (see ``apply``)."""
     B, S, D = x.shape
     E_local = wi.shape[0]
     T = B * S
     x2 = x.reshape(T, D)
     act = activation(act_name)
 
-    logits = (x2.astype(jnp.float32) @ router_w)          # (T, E)
+    logits = logits.astype(jnp.float32).reshape(T, -1)    # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     topw, topi = jax.lax.top_k(probs, top_k)              # (T, k)
     topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
@@ -117,12 +127,35 @@ def apply(p, x, cfg, probe=None, ftc=None, name="moe"):
         ctx is not None and m.n_experts % ctx.tp_size == 0
         and (x.shape[0] * ctx.mesh.size) >= 1 and x.shape[0] % ctx.dp_size == 0)
 
+    # router under the fault layer, outside any shard_map: routing is
+    # row-local, so per-request (B, 2) key streams apply unchanged, and the
+    # draws are identical at TP=1 and TP=N (counter-based RNG).  x cast to
+    # f32 keeps the clean path's router numerics (router weights are f32).
+    logits = linear(x.astype(jnp.float32), p["router"], ftc=ftc,
+                    name=f"{name}/router")
+
     if not use_shard_map:
         T = x.shape[0] * x.shape[1]
         cap = max(int(m.capacity_factor * T * m.top_k / m.n_experts), 1)
-        y, lb = _local_moe(x, p["router"], p["wi"], wg, p["wo"], e0=0,
-                           n_experts=m.n_experts, top_k=m.top_k, capacity=cap,
-                           act_name=cfg.act)
+        one = dict(e0=0, n_experts=m.n_experts, top_k=m.top_k, capacity=cap,
+                   act_name=cfg.act)
+        if ctx is None:
+            y, lb = _local_moe(x, logits, p["wi"], wg, p["wo"], **one)
+        else:
+            # B doesn't divide dp (e.g. a single-request prefill on a dp>1
+            # mesh).  GSPMD's uneven-batch padding is NOT safe through the
+            # sentinel-indexed sort/scatter dispatch — on a 2-D mesh the
+            # auto-partitioned graph routes differently from the meshless
+            # one — so run the whole block per-device on replicated
+            # operands: bit-identical to the single-shard path by
+            # construction (tests/test_serve_sharded.py, MoE scheduler arm).
+            wg_arg = jnp.zeros((), x.dtype) if wg is None else wg
+            y, lb = shard_map(
+                lambda xs, lg, wi, wg_, wo: _local_moe(
+                    xs, lg, wi, None if wg is None else wg_, wo, **one),
+                mesh=ctx.mesh, in_specs=(P(), P(), P(), P(), P()),
+                out_specs=(P(), P()), check=False)(
+                    x, logits, p["wi"], wg_arg, p["wo"])
         return y, cfg.moe.aux_coef * lb.mean()
 
     dp_spec = ctx.resolve("dp")[0]
@@ -130,13 +163,13 @@ def apply(p, x, cfg, probe=None, ftc=None, name="moe"):
     T_local = (x.shape[0] // ctx.dp_size) * x.shape[1]
     cap = max(int(m.capacity_factor * T_local * m.top_k / m.n_experts), 1)
 
-    def shard_fn(xs, rw, wi, wg_, wo):
+    def shard_fn(xs, lg, wi, wg_, wo):
         e0 = jax.lax.axis_index(tp) * (m.n_experts // ctx.tp_size)
-        return _local_moe(xs, rw, wi, wg_, wo, e0=e0, n_experts=m.n_experts,
+        return _local_moe(xs, lg, wi, wg_, wo, e0=e0, n_experts=m.n_experts,
                           top_k=m.top_k, capacity=cap, act_name=cfg.act,
                           tp_axis=tp)
 
-    in_specs = (P(dp_spec, None, None), P(None, None),
+    in_specs = (P(dp_spec, None, None), P(dp_spec, None, None),
                 P(tp, None, None), P(tp, None, None) if wg is not None else P(),
                 P(tp, None, None))
     out_specs = (P(dp_spec, None, None), P(dp_spec))
@@ -145,8 +178,8 @@ def apply(p, x, cfg, probe=None, ftc=None, name="moe"):
     else:
         wg_arg = wg
     y, lb = shard_map(
-        lambda xs, rw, wi, wg_, wo: shard_fn(
-            xs, rw, wi, None if wg is None else wg_, wo),
+        lambda xs, lg, wi, wg_, wo: shard_fn(
+            xs, lg, wi, None if wg is None else wg_, wo),
         mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs,
-        check=False)(x, p["router"], p["wi"], wg_arg, p["wo"])
+        check=False)(x, logits, p["wi"], wg_arg, p["wo"])
     return y, cfg.moe.aux_coef * lb.mean()

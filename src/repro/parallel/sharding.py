@@ -106,30 +106,50 @@ def cache_shardings(cache_tree, mesh: Mesh, unrolled: bool = False):
     """KV/state caches: batch over DP, head/width dims over 'model' when they
     divide.  Cache layouts (leading 'blocks' stack dim unless unrolled):
       attn k/v: (B, C, KH, Dh); rglru h: (B, W), conv: (B, K-1, W);
-      ssd state: (B, H, P, N), conv: (B, K-1, C)."""
+      ssd state: (B, H, P, N), conv: (B, K-1, C).
+
+    Paged attention caches (a ``bt`` block table beside ``k``/``v``) store a
+    *pool* ``(n_blocks, block_size, KH, Dh)``: block tables hold **global**
+    block ids, so the pool dim (and the block dim) must stay replicated over
+    the DP axes — sharding dim 0 as if it were batch would break every
+    table lookup.  Pools shard on kv heads over 'model' only (no split-K
+    fallback: the in-block dim is ``block_size``, not cache length); the
+    table itself is per-slot state and shards with the batch."""
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # paged pool detection: any cache dict holding a block table holds pools
+    leaves = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    pooled = {tuple(k.key for k in p[:-1] if isinstance(k, DictKey))
+              for p, _ in leaves
+              if isinstance(p[-1], DictKey) and p[-1].key == "bt"}
 
     def one(path, x):
         names = [k.key for k in path if isinstance(k, DictKey)]
         stacked = (not unrolled) and names[0].startswith("seg")
         shape = x.shape[1:] if stacked else x.shape
-        entries = [_maybe(mesh, shape[0], dp)] + [None] * (len(shape) - 1)
         name = names[-1]
-        if name in ("k", "v", "ck", "cv") and len(shape) == 4:
-            # (B, C, KH, Dh): prefer sharding kv heads; for archs whose few
-            # kv heads don't divide the TP axis, shard the cache length
-            # instead (flash-decoding split-K: per-shard partial softmax +
-            # tiny psums) so the cache is never TP-replicated.
-            if _maybe(mesh, shape[2], "model"):
-                entries[2] = "model"
-            else:
+        paged = tuple(names[:-1]) in pooled
+        if paged and name in ("k", "v"):
+            # (n_blocks, block_size, KH, Dh): pool + block dims replicated
+            entries = [None] * len(shape)
+            if len(shape) == 4:
+                entries[2] = _maybe(mesh, shape[2], "model")
+        else:
+            entries = [_maybe(mesh, shape[0], dp)] + [None] * (len(shape) - 1)
+            if not paged and name in ("k", "v", "ck", "cv") and len(shape) == 4:
+                # (B, C, KH, Dh): prefer sharding kv heads; for archs whose
+                # few kv heads don't divide the TP axis, shard the cache
+                # length instead (flash-decoding split-K: per-shard partial
+                # softmax + tiny psums) so the cache is never TP-replicated.
+                if _maybe(mesh, shape[2], "model"):
+                    entries[2] = "model"
+                else:
+                    entries[1] = _maybe(mesh, shape[1], "model")
+            elif name == "state" and len(shape) == 4:
                 entries[1] = _maybe(mesh, shape[1], "model")
-        elif name == "state" and len(shape) == 4:
-            entries[1] = _maybe(mesh, shape[1], "model")
-        elif name in ("h",) and len(shape) == 2:
-            entries[1] = _maybe(mesh, shape[1], "model")
-        elif name == "conv" and len(shape) == 3:
-            entries[2] = _maybe(mesh, shape[2], "model")
+            elif name in ("h",) and len(shape) == 2:
+                entries[1] = _maybe(mesh, shape[1], "model")
+            elif name == "conv" and len(shape) == 3:
+                entries[2] = _maybe(mesh, shape[2], "model")
         if stacked:
             entries = [None] + entries
         return NamedSharding(mesh, P(*entries))

@@ -9,8 +9,11 @@ the legacy per-token dispatch path; at temperature 0 the two paths emit
 bit-identical tokens (tests/test_serve_engine.py proves it under every
 registry protection policy and both ft backends).
 
-Works on any mesh: the cache is batch-sharded over DP and head-sharded over
-'model' (see parallel.sharding).
+Works on any mesh: passing ``mesh=`` device_puts the params in the serving
+layout (``param_shardings(no_fsdp=True)``: TP over 'model', replicated over
+the DP axes), shards the input batch over DP, and constrains the caches the
+prefill returns — batch-sharded over DP and head-sharded over 'model' (paged
+pools stay DP-replicated; see parallel.sharding.cache_shardings).
 
 Fault-tolerant serving: pass a ``repro.ft`` protection policy (object or
 registry name) and every projection of prefill and decode computes through
@@ -76,6 +79,17 @@ class Engine:
         self.stats = ServeStats()
         self._n_calls = 0
         ctx = S.make_ctx(mesh) if mesh is not None else None
+        if mesh is not None:
+            # serving layout: TP-sharded weights, replicated over DP (the
+            # docstring's claim, applied for real at construction)
+            self.params = jax.device_put(
+                params, S.param_shardings(params, mesh, no_fsdp=True))
+
+        def _shard_caches(caches):
+            if mesh is None or caches is None:
+                return caches
+            return jax.lax.with_sharding_constraint(
+                caches, S.cache_shardings(caches, mesh))
 
         def _ftc(ftkey):
             if self.policy is None:
@@ -94,8 +108,9 @@ class Engine:
 
         def _prefill(params, batch, max_len, ftkey):
             with mesh_ctx(ctx):
-                return model.prefill(params, batch, max_len=max_len,
-                                     ftc=_ftc(ftkey))
+                caches, logits = model.prefill(params, batch, max_len=max_len,
+                                               ftc=_ftc(ftkey))
+                return _shard_caches(caches), logits
 
         def _decode(params, caches, token, pos, ftkey):
             with mesh_ctx(ctx):
@@ -159,6 +174,8 @@ class Engine:
         if self.model.cfg.frontend == "vision":
             prompt_len += self.model.cfg.n_frontend_tokens
         max_len = prompt_len + n_new
+        if self.mesh is not None:
+            batch = jax.device_put(batch, S.batch_shardings(batch, self.mesh))
         ftkey, skey = self._call_key(key, seed)
         caches, logits = self._prefill(self.params, batch, max_len, ftkey)
         tok = self._sample(logits, skey)

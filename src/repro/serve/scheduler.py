@@ -54,6 +54,11 @@ never perturbs another request's generation.  This holds with
 faulty-weight view of the shared SRAM.  ``ft_backend`` may be
 ``"reference"`` or ``"fused"`` (the fused Pallas decode kernel — same
 draws, bit-identical tokens).
+
+Sharded serving: pass ``mesh=`` and every executable runs under GSPMD with
+the serving layout (see ``Scheduler.__init__`` and docs/serving.md §Sharded
+serving).  Counter-based RNG keeps every per-request fault stream — and
+therefore every temp-0 token — bit-identical to the 1-device run.
 """
 from __future__ import annotations
 
@@ -66,6 +71,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.parallel import sharding as S
+from repro.parallel.ctx import mesh_ctx
 
 
 @dataclasses.dataclass
@@ -113,12 +120,31 @@ class SchedStats:
 class Scheduler:
     def __init__(self, model, params, cfg: SchedulerConfig | None = None,
                  policy=None, ft_backend: str = "reference", ft_t=None,
-                 ft_interpret: bool = True):
+                 ft_interpret: bool = True, mesh=None):
+        """``mesh``: a jax Mesh — params are device_put in the serving layout
+        (TP over 'model', DP-replicated), the slot caches are sharded per
+        ``parallel.sharding.cache_shardings`` (batch over DP, heads over
+        'model', paged pools DP-replicated), and all four executables
+        (prefill / insert / chunk / retire) run under the mesh's activation
+        constraints.  Per-request fault streams are unchanged: threefry is
+        counter-based, so a request's draws are bit-identical at TP=1 and
+        TP=N (tests/test_serve_sharded.py proves it)."""
         from repro.ft import as_policy
         self.model, self.params = model, params
         self.cfg = cfg or SchedulerConfig()
         self.policy = as_policy(policy)
         self.stats = SchedStats()
+        self.mesh = mesh
+        ctx = S.make_ctx(mesh) if mesh is not None else None
+        if mesh is not None:
+            self.params = jax.device_put(
+                params, S.param_shardings(params, mesh, no_fsdp=True))
+
+        def _shard_caches(caches):
+            if mesh is None:
+                return caches
+            return jax.lax.with_sharding_constraint(
+                caches, S.cache_shardings(caches, mesh))
 
         mcfg = model.cfg
         kinds = T._layer_kinds(mcfg)
@@ -126,13 +152,14 @@ class Scheduler:
         if self.cfg.kv not in ("paged", "dense"):
             raise ValueError(f"unknown kv layout {self.cfg.kv!r}")
         if set(kinds) & {"R", "S"} or mcfg.enc_dec:
-            if not (exact and self.cfg.kv == "paged"):
+            if not exact:
                 raise ValueError(
                     "bucketed prefill supports attention families only: "
                     "right-padded prompts would integrate pad tokens into "
                     "recurrent/encoder state.  Recurrent (R/S) and enc-dec "
                     "models schedule with buckets=None (exact-length "
-                    "prefill) and kv='paged'")
+                    "prefill); their recurrent/SSM state lives in dense "
+                    "per-slot rows under either kv layout")
         self._front = (mcfg.n_frontend_tokens if mcfg.frontend == "vision"
                        else 0)
         if (not exact and "L" in kinds
@@ -197,13 +224,16 @@ class Scheduler:
         def _prefill_one(params, batch1, last_idx, rid):
             # per-request streams: prefill draws from fold(fold(base, rid), 0)
             # (B=1, so a single stream per call is already per-request)
-            ftk = jax.random.fold_in(jax.random.fold_in(ftbase, rid), 0)
-            caches, logits = model.prefill(params, batch1, max_len=capacity,
-                                           ftc=_ftc(ftk),
-                                           last_index=last_idx)
-            skey = jax.random.fold_in(sbase, rid)
-            tok0 = _sample(logits, skey[None], jnp.full((1,), -1, jnp.int32))
-            return caches, tok0[0]
+            with mesh_ctx(ctx):
+                ftk = jax.random.fold_in(jax.random.fold_in(ftbase, rid), 0)
+                caches, logits = model.prefill(params, batch1,
+                                               max_len=capacity,
+                                               ftc=_ftc(ftk),
+                                               last_index=last_idx)
+                skey = jax.random.fold_in(sbase, rid)
+                tok0 = _sample(logits, skey[None],
+                               jnp.full((1,), -1, jnp.int32))
+                return caches, tok0[0]
 
         def _scatter_pool(pool, rows, bt_row, wdw, plen):
             # pool (P, bs, KH, Dh); rows (1, S1, KH, Dh).  Prefill positions
@@ -272,16 +302,17 @@ class Scheduler:
             mcfg_ = model.cfg
             kinds_ = T._layer_kinds(mcfg_)
             if mcfg_.unroll:
-                return {f"l{i}": layer(caches[f"l{i}"], c1[f"l{i}"],
-                                       kinds_[i], False)
-                        for i in range(len(kinds_))}
-            out = {}
-            for si, (pattern, _) in enumerate(mcfg_.segments):
-                out[f"seg{si}"] = {
-                    f"s{j}": layer(caches[f"seg{si}"][f"s{j}"],
-                                   c1[f"seg{si}"][f"s{j}"], kind, True)
-                    for j, kind in enumerate(pattern)}
-            return out
+                out = {f"l{i}": layer(caches[f"l{i}"], c1[f"l{i}"],
+                                      kinds_[i], False)
+                       for i in range(len(kinds_))}
+            else:
+                out = {}
+                for si, (pattern, _) in enumerate(mcfg_.segments):
+                    out[f"seg{si}"] = {
+                        f"s{j}": layer(caches[f"seg{si}"][f"s{j}"],
+                                       c1[f"seg{si}"][f"s{j}"], kind, True)
+                        for j, kind in enumerate(pattern)}
+            return _shard_caches(out)
 
         def _retire(caches, slot):
             # point the evicted slot's block tables back at the trash block
@@ -313,10 +344,11 @@ class Scheduler:
                 tok = jnp.where(active, nxt, tok)
                 pos = pos + act
                 tstep = tstep + act
-                return (caches, tok, pos, tstep), nxt
+                return (_shard_caches(caches), tok, pos, tstep), nxt
 
-            (caches, tok, pos, tstep), toks = jax.lax.scan(
-                body, (caches, tok, pos, tstep), None, length=n_steps)
+            with mesh_ctx(ctx):
+                (caches, tok, pos, tstep), toks = jax.lax.scan(
+                    body, (caches, tok, pos, tstep), None, length=n_steps)
             return caches, tok, pos, tstep, jnp.moveaxis(toks, 0, 1)
 
         self._prefill_one = jax.jit(_prefill_one)
@@ -413,6 +445,9 @@ class Scheduler:
         out = {}
 
         caches = self._init_caches(B)
+        if self.mesh is not None:
+            caches = jax.device_put(
+                caches, S.cache_shardings(caches, self.mesh))
         tok = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
         tstep = np.zeros((B,), np.int32)

@@ -16,7 +16,9 @@ from repro.core.strategies import make_strategies
 from repro.ft import get_policy, protect_linear, protect_linear_ste
 from repro.train.train_step import fat_ber_at
 
-FAT_BER = 2e-3
+FAT_BER = 1.5e-3
+FAT_RAMP = 50       # BER warm-up steps; full fault pressure for the rest
+STRESS_BER = 5e-3   # deployment stress, well past the training exposure
 STEPS = 200   # shares the lru cache with tests/test_cnn_crosslayer.py
 
 
@@ -99,19 +101,18 @@ def test_fat_beats_baseline_under_fault():
     through the injected-fault datapath and it holds more accuracy under
     deployment-time faults than the clean-trained twin — at matched clean
     accuracy.  Margins are calibrated against the deterministic oracle
-    (fixed data/fault seeds): measured clean gap 0.002, measured fault
-    margins +0.044 (unprotected) and +0.049 (cross-layer) at 2x the
-    training BER; asserted with slack."""
+    (fixed data/fault seeds, partitionable-threefry streams): measured
+    clean gap 0.006, measured fault margins +0.067 (unprotected) and
+    +0.118 (cross-layer) at the stress BER; asserted with slack."""
     base = trained_cnn("vgg", STEPS)
-    fat = trained_cnn_fat("vgg", STEPS, FAT_BER)
+    fat = trained_cnn_fat("vgg", STEPS, FAT_BER, fat_ramp=FAT_RAMP)
     # matched clean accuracy: FAT must not cost the clean operating point
     assert fat.clean_acc > base.clean_acc - 0.01, \
         (base.clean_acc, fat.clean_acc)
-    # accuracy under stress faults (2x the training BER), both on the raw
-    # unprotected datapath and under the deployment cross-layer stack
-    stress = 2 * FAT_BER
+    # accuracy under stress faults, both on the raw unprotected datapath
+    # and under the deployment cross-layer stack
     for name in ("base", "cl"):
-        pol = get_policy(name, ber=stress)
+        pol = get_policy(name, ber=STRESS_BER)
         a_base = base.accuracy(pol)
         a_fat = fat.accuracy(pol)
         assert a_fat > a_base + 0.03, (name, a_base, a_fat)
@@ -122,12 +123,12 @@ def test_fat_shrinks_required_protection():
     an accuracy target the clean-trained net only reaches by escalating from
     the cross-layer stack to whole-array spatial TMR (~2x execution time),
     while the FAT-trained net reaches it on the cross-layer stack.
-    Target 0.86 sits between the deterministic measured points:
-    base@cl 0.836 < 0.86 <= fat@cl 0.885 <= base@arch 0.962."""
+    Target 0.75 sits between the deterministic measured points:
+    base@cl 0.689 < 0.75 <= fat@cl 0.807 <= base@arch 0.928."""
     base = trained_cnn("vgg", STEPS)
-    fat = trained_cnn_fat("vgg", STEPS, FAT_BER)
-    stress = 2 * FAT_BER
-    target = 0.86
+    fat = trained_cnn_fat("vgg", STEPS, FAT_BER, fat_ramp=FAT_RAMP)
+    stress = STRESS_BER
+    target = 0.75
     cl = get_policy("cl", ber=stress)
     arch = get_policy("arch", ber=stress)
     assert base.accuracy(cl) < target        # cl alone fails the baseline

@@ -8,6 +8,12 @@ from repro.configs import get_config
 from repro.models.moe import _local_moe, init as moe_init
 
 
+def logits(p, x):
+    # `apply` computes router logits through common.linear (fault layer)
+    # before dispatch; these unit tests exercise the dispatch alone
+    return x.astype(jnp.float32) @ p["router"]
+
+
 def setup(cap_factor=8.0):
     cfg = get_config("qwen3-moe-235b-a22b", reduced=True)
     cfg = dataclasses.replace(
@@ -39,7 +45,7 @@ def test_moe_matches_per_token_reference():
     m = cfg.moe
     T = x.shape[0] * x.shape[1]
     cap = int(8.0 * T * m.top_k / m.n_experts) + 1
-    y, _ = _local_moe(x, p["router"], p["wi"], p["wg"], p["wo"], e0=0,
+    y, _ = _local_moe(x, logits(p, x), p["wi"], p["wg"], p["wo"], e0=0,
                       n_experts=m.n_experts, top_k=m.top_k, capacity=cap,
                       act_name=cfg.act)
     ref = per_token_ref(cfg, p, x)
@@ -53,14 +59,14 @@ def test_expert_partitioning_sums_to_whole():
     m = cfg.moe
     T = x.shape[0] * x.shape[1]
     cap = int(8.0 * T * m.top_k / m.n_experts) + 1
-    full, _ = _local_moe(x, p["router"], p["wi"], p["wg"], p["wo"], e0=0,
+    full, _ = _local_moe(x, logits(p, x), p["wi"], p["wg"], p["wo"], e0=0,
                          n_experts=m.n_experts, top_k=m.top_k, capacity=cap,
                          act_name=cfg.act)
     E_half = m.n_experts // 2
-    y0, _ = _local_moe(x, p["router"], p["wi"][:E_half], p["wg"][:E_half],
+    y0, _ = _local_moe(x, logits(p, x), p["wi"][:E_half], p["wg"][:E_half],
                        p["wo"][:E_half], e0=0, n_experts=m.n_experts,
                        top_k=m.top_k, capacity=cap, act_name=cfg.act)
-    y1, _ = _local_moe(x, p["router"], p["wi"][E_half:], p["wg"][E_half:],
+    y1, _ = _local_moe(x, logits(p, x), p["wi"][E_half:], p["wg"][E_half:],
                        p["wo"][E_half:], e0=E_half, n_experts=m.n_experts,
                        top_k=m.top_k, capacity=cap, act_name=cfg.act)
     np.testing.assert_allclose(np.asarray(y0 + y1), np.asarray(full),
@@ -71,7 +77,7 @@ def test_capacity_drops_tokens():
     cfg, p, x = setup()
     m = cfg.moe
     tiny_cap = 1
-    y, _ = _local_moe(x, p["router"], p["wi"], p["wg"], p["wo"], e0=0,
+    y, _ = _local_moe(x, logits(p, x), p["wi"], p["wg"], p["wo"], e0=0,
                       n_experts=m.n_experts, top_k=m.top_k,
                       capacity=tiny_cap, act_name=cfg.act)
     ref = per_token_ref(cfg, p, x)
@@ -85,7 +91,7 @@ def test_aux_loss_near_one_for_uniform_router():
     p = dict(p, router=jnp.zeros_like(p["router"]))
     T = x.shape[0] * x.shape[1]
     cap = int(8.0 * T * m.top_k / m.n_experts) + 1
-    _, lb = _local_moe(x, p["router"], p["wi"], p["wg"], p["wo"], e0=0,
+    _, lb = _local_moe(x, logits(p, x), p["wi"], p["wg"], p["wo"], e0=0,
                        n_experts=m.n_experts, top_k=m.top_k, capacity=cap,
                        act_name=cfg.act)
     # balanced probs: lb == E * sum(f_e * 1/E) == 1 (f sums to 1)

@@ -90,7 +90,10 @@ def test_per_request_fault_stream_independence(danube):
     beside other traffic yields bit-identical tokens, so reliability
     accounting stays per-request."""
     cfg, m, params = danube
-    policy = ft.get_policy("crt1", ber=3e-3, weight_faults=False)
+    # ber high enough that some flip lands an argmax change within 8 tokens
+    # on any key stream (the partitionable-threefry stream at 3e-3 happens
+    # to leave this short generation clean)
+    policy = ft.get_policy("crt1", ber=1e-2, weight_faults=False)
     scfg = SchedulerConfig(max_batch=3, buckets=(8,), max_new_tokens=8,
                            decode_chunk=4)
     a_alone = Scheduler(m, params, scfg, policy=policy).run(
@@ -232,6 +235,25 @@ def test_exact_mode_recurrent_and_enc_dec():
     assert all(len(r.generated) == 4 for r in ecrowd.values())
     ealone = Scheduler(em, eparams, scfg).run([ereqs()[1]])
     assert ealone[1].generated == ecrowd[1].generated
+
+
+def test_recurrent_paged_matches_dense():
+    """kv='dense' is legal for recurrent families too (their R/S state rows
+    are dense per-slot either way), which restores the bit-exactness oracle:
+    the same workload through kv='paged' and kv='dense' must emit identical
+    tokens for a config that mixes attention and recurrent blocks."""
+    cfg = get_config("recurrentgemma-9b", reduced=True)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    scfg = lambda kv: SchedulerConfig(max_batch=2, buckets=None, max_prompt=6,
+                                      max_new_tokens=4, decode_chunk=2, kv=kv)
+    mk = lambda: [Request(rid=i, tokens=_prompt(4 + (i % 2), cfg.vocab,
+                                                60 + i), max_new_tokens=4)
+                  for i in range(3)]
+    outs = {kv: Scheduler(m, params, scfg(kv)).run(mk())
+            for kv in ("dense", "paged")}
+    for i in range(3):
+        assert outs["paged"][i].generated == outs["dense"][i].generated
 
 
 def test_scheduler_vision_frontend():
