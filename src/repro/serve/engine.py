@@ -136,7 +136,12 @@ class Engine:
                 (caches, _, _), toks = jax.lax.scan(
                     body, (caches, tok0, skey),
                     jnp.arange(n_new, dtype=jnp.int32))
-            return jnp.moveaxis(toks, 0, 1)          # (B, n_new)
+            # the final caches are dead to the caller (one generation per
+            # loop) but MUST be returned anyway: donated buffers only alias
+            # when they line up with an output, so dropping them here turns
+            # donate_argnums=(1,) into a silent full-cache copy every call
+            # (tools/ftverify FTV105 checks the lowered HLO for this)
+            return caches, jnp.moveaxis(toks, 0, 1)  # (B, n_new)
 
         self._sample = _sample
         self._prefill = jax.jit(_prefill, static_argnums=(2,))
@@ -184,8 +189,8 @@ class Engine:
             return jnp.zeros((tok.shape[0], 0), jnp.int32)
         pos0 = jnp.asarray(prompt_len, jnp.int32)
         if self.loop == "scan":
-            out = self._loop(self.params, caches, tok, pos0, ftkey, skey,
-                             n_new)
+            _, out = self._loop(self.params, caches, tok, pos0, ftkey, skey,
+                                n_new)
             self.stats = ServeStats(roundtrips=2, tokens=int(out.size))
             return out
         out = []

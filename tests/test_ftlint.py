@@ -336,9 +336,120 @@ def test_ftl006_negative_hashable_static_args():
     assert codes(src) == []
 
 
+# ------------------------------------------------------------------ FTL007 --
+def test_ftl007_positive_config_update_in_library_code():
+    src = """
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    """
+    assert codes(src, "src/repro/serve/engine.py") == ["FTL007"]
+
+
+def test_ftl007_positive_through_import_alias():
+    src = """
+    from jax import config
+
+    config.update("jax_default_matmul_precision", "float32")
+    """
+    assert codes(src, "src/repro/models/common.py") == ["FTL007"]
+
+
+def test_ftl007_negative_sanctioned_site_and_tests():
+    src = """
+    import jax
+
+    jax.config.update("jax_threefry_partitionable", True)
+    """
+    assert codes(src, "src/repro/core/faults.py") == []
+    assert codes(src, "tests/test_faults.py") == []
+    assert codes(src, "tests/conftest.py") == []
+
+
 # --------------------------------------------------------------- machinery --
 def test_syntax_error_is_ftl000_not_crash():
     assert codes("def broken(:\n    pass") == ["FTL000"]
+
+
+def test_multi_code_suppression_covers_each_listed_code():
+    src = """
+    import jax
+
+    def draw(key):
+        a = jax.random.normal(key, (4,))
+        b = jax.random.normal(key, (4,))  # ftlint: disable=FTL001,FTL004 -- paired by design
+        return a + b
+    """
+    assert codes(src) == []
+
+
+def test_empty_justification_marker_does_not_suppress():
+    """A trailing ``--`` with no reason is not a valid waiver: the marker
+    fails to parse and the original finding stays visible (fail-closed)."""
+    src = """
+    import jax
+
+    def paired(key, x):
+        a = jax.random.bernoulli(key, 0.5, x.shape)
+        b = jax.random.bernoulli(key, 0.5, x.shape)  # ftlint: disable=FTL001 --
+        return a, b
+    """
+    assert codes(src) == ["FTL001"]
+
+
+def test_missing_file_warns_not_crashes(tmp_path, capsys):
+    from tools.ftlint.core import iter_py_files, lint_paths
+    assert list(iter_py_files(["no_such_file.py"], tmp_path)) == []
+    assert lint_paths(["no_such_file.py"], root=tmp_path) == []
+    assert "no such file" in capsys.readouterr().err
+
+
+def test_deleted_file_mid_run_warns_not_crashes(tmp_path, capsys):
+    from tools.ftlint.core import lint_file
+    ghost = tmp_path / "ghost.py"
+    assert lint_file(ghost, tmp_path) == []
+    assert "cannot read" in capsys.readouterr().err
+
+
+def test_baseline_entry_for_deleted_file_is_stale_not_fatal(tmp_path, capsys):
+    """A baseline line pointing at a file that no longer exists must not
+    fail the run — it surfaces as a stale-entry note."""
+    from tools.ftlint.core import main
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("FTL001 src/gone/forever.py::draw::key reused\n")
+    assert main([str(clean), "--baseline", str(bl)]) == 0
+    assert "stale baseline" in capsys.readouterr().err
+
+
+def test_report_key_matches_baseline_roundtrip(tmp_path):
+    """The JSON report's ``key`` field is the exact baseline key: pasting a
+    reported key into baseline.txt must suppress that finding on the next
+    run (the report used to omit the key, and consumers reconstructing it
+    drifted from the baseline format)."""
+    import json
+
+    from tools.ftlint.core import main
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent("""
+        import jax
+
+        def draw(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.normal(key, (4,))
+            return a + b
+    """))
+    empty = tmp_path / "empty_baseline.txt"
+    empty.write_text("")
+    report = tmp_path / "report.json"
+    assert main([str(bad), "--baseline", str(empty),
+                 "--write-report", str(report)]) == 1
+    rows = json.loads(report.read_text())["new"]
+    assert rows and all("key" in r for r in rows)
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("\n".join(r["key"] for r in rows) + "\n")
+    assert main([str(bad), "--baseline", str(bl)]) == 0
 
 
 def test_baseline_split_roundtrip():
@@ -369,7 +480,8 @@ def test_every_rule_has_code_name_invariant():
 def test_repo_lints_clean_with_empty_baseline():
     """The whole repo passes every rule; the baseline stays empty (any
     future entry needs a justification in the PR that adds it)."""
-    findings = lint_paths(["src", "tests", "benchmarks", "examples"],
+    findings = lint_paths(["src", "tests", "benchmarks", "examples",
+                           "tools"],
                           root=REPO)
     assert [f.render() for f in findings] == []
     assert load_baseline(REPO / "tools" / "ftlint" / "baseline.txt") == set()

@@ -110,7 +110,16 @@ def lint_source(source: str, path: str = "<string>",
 def lint_file(fp: Path, root: Path, rules=None) -> list[Finding]:
     rel = fp.resolve().relative_to(root.resolve()).as_posix() \
         if fp.resolve().is_relative_to(root.resolve()) else fp.as_posix()
-    return lint_source(fp.read_text(), rel, rules)
+    try:
+        source = fp.read_text()
+    except OSError as e:
+        # a path that raced away mid-run (or a stale explicit argument)
+        # shouldn't take down the whole lint — its baseline entries will
+        # surface as stale instead
+        print(f"[ftlint] warning: cannot read {rel}: {e.strerror or e}",
+              file=sys.stderr)
+        return []
+    return lint_source(source, rel, rules)
 
 
 def iter_py_files(paths: list[str], root: Path):
@@ -119,6 +128,10 @@ def iter_py_files(paths: list[str], root: Path):
         if fp.is_dir():
             yield from sorted(fp.rglob("*.py"))
         elif fp.suffix == ".py":
+            if not fp.exists():
+                print(f"[ftlint] warning: no such file: {p}",
+                      file=sys.stderr)
+                continue
             yield fp
 
 
@@ -194,9 +207,16 @@ def main(argv=None) -> int:
               "prune tools/ftlint/baseline.txt)", file=sys.stderr)
 
     if args.write_report:
+        def row(f: Finding) -> dict:
+            # include the baseline key verbatim: report consumers were
+            # reconstructing it from (code, path, scope, message) and
+            # drifting from baseline.txt whenever the key format changed
+            d = dataclasses.asdict(f)
+            d["key"] = f.baseline_key()
+            return d
         report = {
-            "new": [dataclasses.asdict(f) for f in new],
-            "baselined": [dataclasses.asdict(f) for f in old],
+            "new": [row(f) for f in new],
+            "baselined": [row(f) for f in old],
             "stale_baseline": sorted(stale),
         }
         Path(args.write_report).write_text(json.dumps(report, indent=2))

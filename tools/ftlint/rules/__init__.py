@@ -34,5 +34,6 @@ from tools.ftlint.rules.ftl003_policy_pytree import RULE as FTL003  # noqa: E402
 from tools.ftlint.rules.ftl004_bit_exact import RULE as FTL004  # noqa: E402
 from tools.ftlint.rules.ftl005_pallas import RULE as FTL005  # noqa: E402
 from tools.ftlint.rules.ftl006_jit_cache import RULE as FTL006  # noqa: E402
+from tools.ftlint.rules.ftl007_config_update import RULE as FTL007  # noqa: E402
 
-ALL_RULES = (FTL001, FTL002, FTL003, FTL004, FTL005, FTL006)
+ALL_RULES = (FTL001, FTL002, FTL003, FTL004, FTL005, FTL006, FTL007)

@@ -1,0 +1,68 @@
+"""FTL007 — global jax config mutations live in exactly one place.
+
+Invariant: library code never calls ``jax.config.update``.  The repo's
+bit-exactness contracts hang on process-global flags
+(``jax_threefry_partitionable`` above all: flipping it changes every
+random draw in the process), so the flags are pinned once, at
+``repro.core.faults`` import, before anything traces.  A second update
+site is a time bomb in either direction: run before the sanctioned pin it
+silently loses; run after a trace was cached it changes the lowering for
+*later* executables only — two halves of one run disagreeing on the PRNG
+(the partition-variance bug class ftverify FTV102 checks at the IR level).
+
+Tests and conftest files are exempt: flipping flags to *prove* a contract
+breaks (e.g. the FTV102 revert fixture) is exactly what tests are for.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.ftlint.jaxctx import ModuleCtx
+from tools.ftlint.rules import Rule
+
+# the one sanctioned library update site
+ALLOWED_SUFFIXES = ("core/faults.py",)
+
+
+def _exempt_path(path: str) -> bool:
+    p = path.replace("\\", "/")
+    if any(p.endswith(sfx) for sfx in ALLOWED_SUFFIXES):
+        return True
+    parts = p.split("/")
+    fname = parts[-1]
+    return ("tests" in parts or fname.startswith("test_")
+            or fname == "conftest.py")
+
+
+class ConfigUpdateRule(Rule):
+    code = "FTL007"
+    name = "config-update-site"
+    invariant = ("jax.config.update appears only in repro/core/faults.py "
+                 "(and tests); all other code inherits the pinned flags")
+
+    def check(self, ctx: ModuleCtx):
+        if _exempt_path(ctx.path):
+            return []
+        findings = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = ctx.call_target(node)
+            if target is None:
+                continue
+            if target == "jax.config.update" \
+                    or target.endswith(".config.update"):
+                flag = ""
+                if node.args and isinstance(node.args[0], ast.Constant):
+                    flag = f" ({node.args[0].value!r})"
+                findings.append(self.finding(
+                    ctx, node,
+                    f"jax.config.update{flag} outside repro/core/faults.py: "
+                    f"global flags are pinned once at the fault layer's "
+                    f"import — a second site either loses the race or "
+                    f"changes lowering mid-process (partition-variant PRNG, "
+                    f"see docs/ftlint.md)"))
+        return findings
+
+
+RULE = ConfigUpdateRule()

@@ -1,0 +1,28 @@
+"""ftverify — jaxpr-level verification of the fault-tolerance contracts.
+
+``tools/ftlint`` checks the contracts it can see in the AST; this package
+checks the ones that only exist in the traced IR.  All three sharded-serving
+divergences fixed in PR 9 (legacy threefry partition-variance, excess-
+precision elision of bf16 round-trips, sharding-dependent dispatch) were
+invisible to source-level analysis — they are properties of the jaxpr and
+the lowered HLO, so that is where ftverify verifies them: it traces the
+repo's *real* executables (engine decode loop, scheduler prefill, the
+fused_decode triplet, ``make_train_step``, the batched DSE oracle) with
+``jax.make_jaxpr`` / ``jit(...).lower(...)`` and runs rules FTV101–FTV106
+over the resulting dataflow graph.
+
+Usage::
+
+    python -m tools.ftverify --manifest default
+
+Findings reuse the ``tools/ftlint`` conventions (same ``Finding`` record,
+same line-number-free baseline keys, ``tools/ftverify/baseline.txt``
+grandfather file, ``--write-report`` JSON artifact).  Rule catalogue and
+the PR 9 bug each rule generalizes: docs/ftlint.md §ftverify.
+"""
+from tools.ftverify.core import VerifyEnv, main, verify_targets
+from tools.ftverify.jaxpr_utils import Graph, build_graph
+from tools.ftverify.rules import ALL_RULES
+
+__all__ = ["ALL_RULES", "Graph", "VerifyEnv", "build_graph", "main",
+           "verify_targets"]

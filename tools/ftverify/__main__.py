@@ -1,0 +1,34 @@
+"""``python -m tools.ftverify`` entry point.
+
+Environment pins must land before jax initializes, so they happen here,
+not in ``core.main``:
+
+* ``--xla_allow_excess_precision=false`` — the FTV102 contract flag — is
+  appended to ``XLA_FLAGS`` unless the caller passes
+  ``--no-pin-excess-precision`` (the CI arm that proves FTV102 fires) or
+  already set the flag themselves;
+* the emulated 8-device mesh (``--xla_force_host_platform_device_count``)
+  so the mesh targets trace with real multi-device shardings when the host
+  has a lone CPU.
+"""
+import os
+import sys
+from pathlib import Path
+
+# a repo checkout runs without PYTHONPATH=src
+_SRC = str(Path(__file__).resolve().parents[2] / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+_argv = sys.argv[1:]
+_flags = os.environ.get("XLA_FLAGS", "")
+if ("--no-pin-excess-precision" not in _argv
+        and "--xla_allow_excess_precision" not in _flags):
+    _flags = (_flags + " --xla_allow_excess_precision=false").strip()
+if "--xla_force_host_platform_device_count" not in _flags:
+    _flags = (_flags + " --xla_force_host_platform_device_count=8").strip()
+os.environ["XLA_FLAGS"] = _flags
+
+from tools.ftverify.core import main  # noqa: E402
+
+raise SystemExit(main(_argv))

@@ -1,0 +1,210 @@
+"""ftverify runner: targets, per-target rule contexts, baseline, CLI.
+
+Reuses the ``tools/ftlint`` findings layer (:class:`Finding`, baseline
+loading/splitting) so both analyzers share one report/suppression idiom;
+trace findings use a ``trace://<target>`` pseudo-path and line 0, which
+keeps their baseline keys stable under any source edit.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import traceback
+from pathlib import Path
+from typing import Any, Callable
+
+from tools.ftlint.core import Finding, load_baseline, split_baselined
+
+
+@dataclasses.dataclass
+class VerifyEnv:
+    """Process facts the rules check against (read once per run)."""
+    excess_precision_pinned: bool
+    threefry_partitionable: bool
+    n_devices: int
+
+    @classmethod
+    def capture(cls) -> "VerifyEnv":
+        import jax
+        return cls(
+            excess_precision_pinned=("--xla_allow_excess_precision=false"
+                                     in os.environ.get("XLA_FLAGS", "")),
+            threefry_partitionable=bool(
+                jax.config.jax_threefry_partitionable),
+            n_devices=jax.device_count(),
+        )
+
+
+@dataclasses.dataclass
+class Target:
+    """One traced executable.  ``trace``/``lower`` are lazy thunks so a
+    ``--rules`` filtered run only pays for the artifacts its rules read."""
+    name: str
+    tags: frozenset
+    trace: Callable[[], Any] | None = None       # -> ClosedJaxpr
+    lower: Callable[[], str] | None = None       # -> StableHLO text
+    donated_leaves: int = 0                      # buffers expected to alias
+    mesh: Any = None
+
+
+class TargetCtx:
+    """Lazy per-target analysis cache handed to each rule."""
+
+    def __init__(self, target: Target, env: VerifyEnv):
+        self.target = target
+        self.env = env
+        self._graph = None
+        self._lowered = None
+
+    @property
+    def graph(self):
+        if self._graph is None and self.target.trace is not None:
+            from tools.ftverify.jaxpr_utils import build_graph
+            self._graph = build_graph(self.target.trace())
+        return self._graph
+
+    @property
+    def lowered(self) -> str | None:
+        if self._lowered is None and self.target.lower is not None:
+            self._lowered = self.target.lower()
+        return self._lowered
+
+    def finding(self, code: str, scope: str, message: str) -> Finding:
+        return Finding(code, f"trace://{self.target.name}", 0, 0, scope,
+                       message)
+
+
+def verify_targets(targets, env: VerifyEnv | None = None,
+                   rules=None) -> list[Finding]:
+    """Run every rule over every target (plus each rule's global checks).
+
+    A target that fails to trace/lower, or a rule that crashes, is reported
+    as an FTV000 finding rather than aborting the run — a verifier that
+    dies on the first broken target hides every other contract."""
+    from tools.ftverify.rules import ALL_RULES
+    env = env or VerifyEnv.capture()
+    rules = ALL_RULES if rules is None else rules
+    findings: list[Finding] = []
+    for rule in rules:
+        try:
+            findings.extend(rule.check_global(env))
+        except Exception as e:
+            findings.append(Finding(
+                "FTV000", f"rule://{rule.code}", 0, 0, "global",
+                f"global check crashed: {type(e).__name__}: {e}"))
+    for t in targets:
+        ctx = TargetCtx(t, env)
+        for rule in rules:
+            if not rule.applies(t):
+                continue
+            try:
+                findings.extend(rule.check_target(ctx))
+            except Exception as e:
+                traceback.print_exc(file=sys.stderr)
+                findings.append(ctx.finding(
+                    "FTV000", rule.code,
+                    f"{rule.code} check failed on this target: "
+                    f"{type(e).__name__}: {e}"))
+    findings.sort(key=lambda f: (f.path, f.code, f.scope, f.message))
+    return findings
+
+
+# -------------------------------------------------------------------- CLI --
+def main(argv=None) -> int:
+    from tools.ftverify.rules import ALL_RULES
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.ftverify",
+        description="Trace-level verification of the repo's fault-tolerance "
+                    "contracts (see docs/ftlint.md §ftverify).")
+    ap.add_argument("--manifest", default="default", choices=("default",),
+                    help="target manifest to trace")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule codes to run (default: all)")
+    ap.add_argument("--baseline",
+                    default=str(Path(__file__).parent / "baseline.txt"))
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings as errors too")
+    ap.add_argument("--write-report", metavar="PATH",
+                    help="write a JSON report (CI artifact)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--expect", metavar="CODE", default=None,
+                    help="invert the exit status around CODE: succeed iff "
+                         "at least one new CODE finding fires (CI exercises "
+                         "the unpinned-flag arm this way)")
+    ap.add_argument("--no-pin-excess-precision", action="store_true",
+                    help="(parsed in __main__ before jax loads) do not pin "
+                         "--xla_allow_excess_precision=false for this run")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(f"{r.code}  {r.name}")
+            print(f"        invariant: {r.invariant}")
+        return 0
+
+    rules = ALL_RULES
+    if args.rules:
+        want = {c.strip() for c in args.rules.split(",") if c.strip()}
+        rules = tuple(r for r in ALL_RULES if r.code in want)
+        unknown = want - {r.code for r in rules}
+        if unknown:
+            print(f"[ftverify] unknown rule(s): {sorted(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    from tools.ftverify.targets import default_manifest
+    # build the manifest BEFORE capturing the env: constructing targets
+    # imports the repo (repro.core.faults pins jax_threefry_partitionable at
+    # import), so capture-then-build would read the flag pre-pin and FTV102
+    # would report the tracing processes' state wrongly
+    targets = default_manifest()
+    env = VerifyEnv.capture()
+    findings = verify_targets(targets, env, rules)
+    baseline = set() if args.no_baseline else load_baseline(
+        Path(args.baseline))
+    new, old = split_baselined(findings, baseline)
+
+    for f in new:
+        print(f.render())
+    if old:
+        print(f"[ftverify] {len(old)} baselined finding(s) not shown "
+              f"(--no-baseline to list)", file=sys.stderr)
+    stale = baseline - {f.baseline_key() for f in findings}
+    if stale:
+        print(f"[ftverify] note: {len(stale)} stale baseline entr"
+              f"{'y' if len(stale) == 1 else 'ies'} (fixed or moved — "
+              "prune tools/ftverify/baseline.txt)", file=sys.stderr)
+
+    if args.write_report:
+        def row(f: Finding) -> dict:
+            d = dataclasses.asdict(f)
+            d["key"] = f.baseline_key()
+            return d
+        report = {
+            "env": dataclasses.asdict(env),
+            "targets": [t.name for t in targets],
+            "rules": [r.code for r in rules],
+            "new": [row(f) for f in new],
+            "baselined": [row(f) for f in old],
+            "stale_baseline": sorted(stale),
+        }
+        Path(args.write_report).write_text(json.dumps(report, indent=2))
+
+    n_exp = ""
+    if args.expect:
+        hits = [f for f in new if f.code == args.expect]
+        others = [f for f in new if f.code != args.expect]
+        ok = bool(hits) and not others
+        n_exp = (f", expected {args.expect}: "
+                 f"{'fired' if hits else 'DID NOT FIRE'}"
+                 + (f" (+{len(others)} unexpected)" if others else ""))
+        status = 0 if ok else 1
+    else:
+        status = 1 if new else 0
+    print(f"[ftverify] {len(targets)} targets, {len(rules)} rules: "
+          f"{'clean' if not new else f'{len(new)} finding(s)'}{n_exp}",
+          file=sys.stderr)
+    return status

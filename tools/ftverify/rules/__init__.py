@@ -1,0 +1,38 @@
+"""ftverify rule registry.
+
+Each rule module exposes a ``RULE`` instance.  A rule can implement two
+hooks: ``check_target(ctx)`` runs per manifest target (``ctx`` is a
+:class:`tools.ftverify.core.TargetCtx` with the lazy jaxpr graph and
+lowered HLO), and ``check_global(env)`` runs once per verification pass
+(for process-wide facts like config flags and the policy-sweep traces).
+``applies(target)`` gates ``check_target`` on the target's tags.
+
+Rule catalogue with the motivating PR 9 bugs: docs/ftlint.md §ftverify.
+"""
+from __future__ import annotations
+
+
+class TraceRule:
+    code = "FTV000"
+    name = "abstract"
+    invariant = ""
+    tags: frozenset = frozenset()        # run on targets carrying any of these
+
+    def applies(self, target) -> bool:
+        return not self.tags or bool(self.tags & target.tags)
+
+    def check_target(self, ctx):
+        return []
+
+    def check_global(self, env):
+        return []
+
+
+from tools.ftverify.rules.ftv101_int_datapath import RULE as FTV101  # noqa: E402
+from tools.ftverify.rules.ftv102_partition import RULE as FTV102  # noqa: E402
+from tools.ftverify.rules.ftv103_key_streams import RULE as FTV103  # noqa: E402
+from tools.ftverify.rules.ftv104_one_executable import RULE as FTV104  # noqa: E402
+from tools.ftverify.rules.ftv105_donation import RULE as FTV105  # noqa: E402
+from tools.ftverify.rules.ftv106_sharding import RULE as FTV106  # noqa: E402
+
+ALL_RULES = (FTV101, FTV102, FTV103, FTV104, FTV105, FTV106)

@@ -1,0 +1,120 @@
+"""FTV102 — partition invariance of the randomness and the float boundary.
+
+PR 9's sharded-serving battery found two ways a bit-exactness contract can
+hold on one device and silently break on a mesh:
+
+* **Legacy threefry lowering** computes ``random_bits`` with a
+  partition-*variant* counter layout: the same key produces different words
+  at TP=1 and TP=N.  The repo pins ``jax_threefry_partitionable=True`` once
+  at ``repro.core.faults`` import; this rule checks the live config flag AND
+  probes the actual lowering for the partitionable signature (a ``ui64``
+  iota over the flat counter space) — a stale early trace or a stray
+  ``jax.config.update`` elsewhere would pass the flag check but fail the
+  lowering probe.
+
+* **Excess-precision elision**: XLA may fuse an ``f32 -> bf16 -> f32``
+  convert pair into a no-op, keeping full f32 precision *on some shards
+  only* (fusion decisions are per-partition) — a cross-device value
+  divergence on the quantization inputs.  Pinning
+  ``--xla_allow_excess_precision=false`` in ``XLA_FLAGS`` forces the
+  rounding everywhere.  This rule finds the vulnerable convert pairs in
+  every traced target and flags them unless the flag is pinned; CI runs one
+  arm without the pin (``--no-pin-excess-precision --expect FTV102``) to
+  prove the rule actually fires on the real executables.
+"""
+from __future__ import annotations
+
+from tools.ftlint.core import Finding
+from tools.ftverify.rules import TraceRule
+
+# the partitionable threefry lowering enumerates the counter space with a
+# 64-bit iota; the legacy lowering builds 32-bit halves and slices
+PARTITIONABLE_MARKER = "xui64>"
+
+
+def _gfind(code: str, path: str, scope: str, msg: str) -> Finding:
+    return Finding(code, path, 0, 0, scope, msg)
+
+
+def probe_threefry_lowering() -> str:
+    """StableHLO of a minimal random_bits executable (current process
+    config)."""
+    import jax
+    import jax.numpy as jnp
+    k = jax.random.key(0)
+    return jax.jit(
+        lambda key: jax.random.bits(key, (256,), jnp.uint32)
+    ).lower(k).as_text()
+
+
+def check_config(env, finding) -> list:
+    out = []
+    if not env.threefry_partitionable:
+        out.append(finding(
+            "jax.config",
+            "jax_threefry_partitionable is False — legacy threefry lowering "
+            "is partition-variant: the same key yields different random "
+            "bits at TP=1 vs TP=N (repro.core.faults pins this flag at "
+            "import; something ran before it or flipped it back)"))
+        return out
+    hlo = probe_threefry_lowering()
+    if PARTITIONABLE_MARKER not in hlo:
+        out.append(finding(
+            "threefry-lowering",
+            "jax_threefry_partitionable is set but random_bits lowers "
+            "without the partitionable ui64 counter iota — the flag was "
+            "flipped after a trace was cached, or the lowering path "
+            "changed; random draws are not partition-invariant"))
+    return out
+
+
+def find_bf16_roundtrips(g) -> list:
+    """(f32 -> bf16 convert, bf16 -> f32 convert) consumer pairs."""
+    import jax.numpy as jnp
+    pairs = []
+    for e in g.eqns_by_prim("convert_element_type"):
+        if not (g.dtype(e.invars[0]) == jnp.float32
+                and g.dtype(e.outvars[0]) == jnp.bfloat16):
+            continue
+        for ce, _ in g.consumers(e.outvars[0]):
+            if ce.prim == "convert_element_type" \
+                    and g.dtype(ce.outvars[0]) == jnp.float32:
+                pairs.append((e, ce))
+    return pairs
+
+
+class PartitionRule(TraceRule):
+    code = "FTV102"
+    name = "partition-invariance"
+    invariant = ("threefry lowers in partitionable (ui64 counter) form, and "
+                 "every f32->bf16->f32 convert pair in a traced executable "
+                 "is protected from excess-precision elision by pinning "
+                 "--xla_allow_excess_precision=false")
+    tags = frozenset()                       # every traced target
+
+    def check_global(self, env):
+        return check_config(
+            env, lambda scope, msg: _gfind(self.code, "global://threefry",
+                                           scope, msg))
+
+    def check_target(self, ctx):
+        if ctx.env.excess_precision_pinned:
+            return []
+        g = ctx.graph
+        if g is None:
+            return []
+        pairs = find_bf16_roundtrips(g)
+        if not pairs:
+            return []
+        where = sorted({"/".join(e.path) or "<top>" for e, _ in pairs})
+        return [ctx.finding(
+            self.code, "excess-precision",
+            f"{len(pairs)} f32->bf16->f32 convert pair(s) (in "
+            f"{', '.join(where[:4])}{'...' if len(where) > 4 else ''}) with "
+            f"--xla_allow_excess_precision=false NOT pinned in XLA_FLAGS — "
+            f"XLA may elide the bf16 rounding on some shards only, "
+            f"breaking cross-device bit-exactness of the quantization "
+            f"inputs")]
+
+
+RULE = PartitionRule()

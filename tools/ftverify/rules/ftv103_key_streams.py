@@ -1,0 +1,86 @@
+"""FTV103 — key-stream discipline on the traced draws.
+
+The repo's contract (``repro.core.faults.fold_stream``): every consumer of
+fault randomness addresses its draws by a distinct fold_in path under one
+root key.  ftlint's FTL003 checks the *call sites*; this rule checks the
+*draws*: in the flattened jaxpr, every ``random_bits`` key operand must have
+a distinct origin — two draws whose keys resolve (through splits, fold_ins,
+reshapes, slices) to the same producer consume the same stream, no matter
+how the key was laundered through helpers on the way.
+
+Also checked: a ``random_bits`` inside a ``scan`` body must derive its key
+from the loop state (the carry or the scanned-over xs).  A key closed over
+from outside the scan replays the identical fault pattern every iteration —
+the serving-loop bug class the engine avoids by folding the step index
+``i + 1`` into the fault key *inside* the scan.
+"""
+from __future__ import annotations
+
+from tools.ftverify.rules import TraceRule
+
+
+def check_reuse(g, finding) -> list:
+    """Group random_bits draws by the canonical origin of their key."""
+    groups: dict = {}
+    for e in g.eqns_by_prim("random_bits"):
+        if not e.invars:
+            continue
+        groups.setdefault(g.origin_sig(e.invars[0]), []).append(e)
+    out = []
+    for sig, eqns in groups.items():
+        if len(eqns) < 2:
+            continue
+        # the same key may be drawn in mutually-exclusive cond branches
+        if all("cond" in e.path for e in eqns):
+            continue
+        where = ", ".join(
+            f"eqn{e.idx}@{'/'.join(e.path) or '<top>'}" for e in eqns[:4])
+        out.append(finding(
+            "key-reuse",
+            f"{len(eqns)} random_bits draws share one key origin ({where}"
+            f"{', ...' if len(eqns) > 4 else ''}) — two sites consume the "
+            f"same fault stream; derive each from a distinct fold_in path "
+            f"(repro.core.faults.fold_stream)"))
+    return out
+
+
+def check_scan_invariance(g, finding) -> list:
+    """A draw inside a scan whose key does not depend on the carry/xs
+    replays the same bits every iteration."""
+    out = []
+    flagged: set[int] = set()
+    for e in g.eqns_by_prim("random_bits"):
+        if not e.scans or not e.invars:
+            continue
+        scan_idx = e.scans[-1]
+        variant = g.scan_variant_roots(scan_idx)
+        if g.find(e.invars[0]) not in variant and e.idx not in flagged:
+            flagged.add(e.idx)
+            out.append(finding(
+                "scan-invariant-key",
+                f"random_bits (eqn{e.idx}@{'/'.join(e.path)}) inside a scan "
+                f"draws from a key independent of the carry and xs — the "
+                f"same fault pattern is replayed every loop iteration; "
+                f"fold the step index into the key inside the scan body"))
+    return out
+
+
+class KeyStreamRule(TraceRule):
+    code = "FTV103"
+    name = "key-stream-discipline"
+    invariant = ("every random_bits key has a distinct fold_in origin, and "
+                 "draws inside scan bodies vary with the loop state")
+    tags = frozenset({"rng", "protect"})
+
+    def check_target(self, ctx):
+        g = ctx.graph
+        if g is None:
+            return []
+
+        def finding(scope, msg):
+            return ctx.finding(self.code, scope, msg)
+
+        return check_reuse(g, finding) + check_scan_invariance(g, finding)
+
+
+RULE = KeyStreamRule()

@@ -1,0 +1,137 @@
+"""FTV104 — "BER is the only dynamic leaf", machine-checked.
+
+The DSE oracle and the FAT BER ramp both rely on one property of
+``ProtectionPolicy``: the BER is the single pytree leaf, everything else is
+static treedef structure.  That is what lets a BER ramp run as ONE
+executable (the traced step counter rides the leaf through
+``fat_ber_at`` -> ``with_ber``) and lets the batched oracle put whole
+candidate sweeps on a vmap axis keyed only on the canonical treedef.
+
+These are registry-wide properties, so this rule runs globally (no target):
+
+* every registered policy flattens to exactly one leaf;
+* ``with_ber`` preserves the treedef (the jit-cache key of the oracle
+  executables — a structure change would silently recompile per BER point);
+* ``tree_unflatten`` + the full protected datapath trace with an *abstract*
+  BER derived from an abstract step counter (``fat_ber_at``).  If any code
+  on the path concretizes the BER (a python ``if ber == 0:``, a
+  ``float(ber)``), the trace raises and the sweep shatters into one
+  executable per operating point;
+* tuning the numeric Table-I knobs (``ib_th`` / ``nb_th`` / ``s_th``) must
+  not change the ``_batch_canon`` canonical structure — those knobs ride
+  the batch axis in ``_acc_under_fault_dyn``, so moving one onto the
+  treedef would break cross-candidate batching.
+"""
+from __future__ import annotations
+
+from tools.ftlint.core import Finding
+from tools.ftverify.rules import TraceRule
+
+
+def _gfind(code: str, scope: str, msg: str) -> Finding:
+    return Finding(code, "global://ft.registry", 0, 0, scope, msg)
+
+
+def check_policy_leaves(finding) -> list:
+    import jax
+    from repro.ft import get_policy, list_policies
+    out = []
+    for name in list_policies():
+        pol = get_policy(name)
+        leaves, treedef = jax.tree_util.tree_flatten(pol)
+        if len(leaves) != 1:
+            out.append(finding(
+                name,
+                f"policy {name!r} flattens to {len(leaves)} leaves — BER "
+                f"must be the only dynamic leaf or every sweep recompiles "
+                f"per point"))
+            continue
+        td2 = jax.tree_util.tree_structure(pol.with_ber(0.123))
+        if td2 != treedef:
+            out.append(finding(
+                name,
+                f"policy {name!r}: with_ber() changes the treedef — the "
+                f"oracle jit cache keys on the treedef, so every BER point "
+                f"would compile its own executable"))
+    return out
+
+
+def check_abstract_ber_trace(finding) -> list:
+    """Trace step -> fat_ber_at -> with_ber -> protect_linear with an
+    abstract step counter: success == the whole BER ramp is one
+    executable."""
+    import jax
+    import jax.numpy as jnp
+    from repro.ft import get_policy, list_policies, protect_linear
+    from repro.train.train_step import fat_ber_at
+
+    key = jax.random.PRNGKey(0)
+    x = jax.ShapeDtypeStruct((4, 8), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    out = []
+    for name in list_policies():
+        pol = get_policy(name)
+        _, treedef = jax.tree_util.tree_flatten(pol)
+
+        def ramp_step(s, xx, ww, _td=treedef):
+            ber = fat_ber_at(1e-3, 100, s)
+            p = jax.tree_util.tree_unflatten(_td, (ber,))
+            return protect_linear(key, xx, ww, p)
+
+        try:
+            jax.eval_shape(ramp_step, step, x, w)
+        except Exception as e:  # noqa: BLE001 — any trace error is the finding
+            out.append(finding(
+                name,
+                f"policy {name!r} concretizes the BER under tracing "
+                f"({type(e).__name__}: {str(e).splitlines()[0][:140]}) — "
+                f"the BER ramp / registry sweep cannot run as one "
+                f"executable"))
+    return out
+
+
+def check_batch_canon(finding) -> list:
+    import jax
+    out = []
+    try:
+        from repro.core.evaluate import _batch_canon
+    except Exception as e:  # noqa: BLE001
+        return [finding("import", f"cannot import _batch_canon: {e}")]
+    from repro.ft import get_policy, list_policies
+    for name in list_policies():
+        pol = get_policy(name)
+        base = jax.tree_util.tree_structure(_batch_canon(pol))
+        for knob, val in (("ib_th", 5), ("nb_th", 2), ("s_th", 0.25)):
+            try:
+                tuned = pol.tune(**{knob: val})
+            except TypeError:
+                continue
+            if jax.tree_util.tree_structure(_batch_canon(tuned)) != base:
+                out.append(finding(
+                    name,
+                    f"policy {name!r}: tuning {knob} changes the canonical "
+                    f"batching structure (_batch_canon) — that knob is "
+                    f"supposed to ride the vmap axis, not the treedef; "
+                    f"candidates differing only in {knob} would stop "
+                    f"sharing one executable"))
+    return out
+
+
+class OneExecutableRule(TraceRule):
+    code = "FTV104"
+    name = "one-executable-sweeps"
+    invariant = ("BER is the only policy pytree leaf; with_ber preserves "
+                 "the treedef; the protected datapath traces with an "
+                 "abstract BER; numeric knobs don't perturb _batch_canon")
+    tags = frozenset()
+
+    def check_global(self, env):
+        def finding(scope, msg):
+            return _gfind(self.code, scope, msg)
+        return (check_policy_leaves(finding)
+                + check_abstract_ber_trace(finding)
+                + check_batch_canon(finding))
+
+
+RULE = OneExecutableRule()

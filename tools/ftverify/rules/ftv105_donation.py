@@ -1,0 +1,48 @@
+"""FTV105 — buffer donation actually lands as aliasing.
+
+``donate_argnums`` is a *request*: if the donated buffer's shape/dtype/
+layout doesn't line up with an output — e.g. the function never returns the
+updated caches — XLA silently copies instead of aliasing, and every decode
+step pays a full cache copy.  jax only surfaces this as a warning at
+*execution* time; this rule checks the lowered HLO at verify time: each
+donated leaf the manifest declares must show up as a ``tf.aliasing_output``
+input attribute, or — when output shardings are unspecified (mesh targets)
+and jax defers the aliasing decision to XLA — as a ``jax.buffer_donor``
+donor mark.  Either way the donated buffer is wired for reuse; zero
+markers means jax dropped the donation at trace time (the warning path).
+"""
+from __future__ import annotations
+
+from tools.ftverify.rules import TraceRule
+
+ALIAS_MARKER = "tf.aliasing_output"
+DONOR_MARKER = "jax.buffer_donor"
+
+
+def count_aliased_inputs(hlo_text: str) -> int:
+    return hlo_text.count(ALIAS_MARKER) + hlo_text.count(DONOR_MARKER)
+
+
+class DonationRule(TraceRule):
+    code = "FTV105"
+    name = "donation-lands"
+    invariant = ("every buffer a jitted executable donates is aliased to an "
+                 "output in the lowered HLO (no silent copies)")
+    tags = frozenset()
+
+    def check_target(self, ctx):
+        t = ctx.target
+        if t.donated_leaves <= 0 or ctx.lowered is None:
+            return []
+        n = count_aliased_inputs(ctx.lowered)
+        if n >= t.donated_leaves:
+            return []
+        return [ctx.finding(
+            self.code, "donation",
+            f"{t.donated_leaves} leaves are donated but only {n} lowered "
+            f"with {ALIAS_MARKER}/{DONOR_MARKER} — donation is silently "
+            f"dropped (the executable copies those buffers every call); "
+            f"usually the function fails to return the updated buffers")]
+
+
+RULE = DonationRule()
